@@ -1,0 +1,103 @@
+"""Shared driver for the paper-reproduction experiments (Sec. V).
+
+Runs the (N, D) simulation engine (repro.core.error_feedback) with the
+paper's protocol: uniform random allocation approximating pairwise balance,
+Bernoulli stragglers, 5 independent trials, mean +/- std reporting.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import coding, compression as C, error_feedback as EF
+from repro.data import tasks
+
+METHODS = {
+    "cocoef": EF.cocoef_step,
+    "coco": EF.coco_step,
+    "unbiased": EF.unbiased_step,
+    "unbiased_diff": EF.unbiased_diff_step,
+    "uncompressed": None,
+}
+
+
+def run_trial(method: str, compressor, grad_fn, loss_fn, theta0, *,
+              N=100, M=100, d=5, p=0.2, gamma=1e-5, T=400, seed=0,
+              gamma_fn=None, record_every=20, diff_alpha=0.2,
+              eval_fns: Optional[Dict[str, Callable]] = None):
+    alloc = coding.random_allocation(seed, N, M, d)
+    W = coding.encode_weights(alloc, p)
+    mask_key = jax.random.PRNGKey(1000 + seed)
+    comp_key = jax.random.PRNGKey(2000 + seed)
+    needs_key = compressor is not None and compressor.unbiased
+
+    if method == "unbiased_diff":
+        st = EF.DiffState.init(theta0, N)
+    else:
+        st = EF.EFState.init(theta0, N)
+
+    hist = {"step": [], "loss": []}
+    if eval_fns:
+        for k in eval_fns:
+            hist[k] = []
+
+    def record(t):
+        hist["step"].append(t)
+        hist["loss"].append(float(loss_fn(st.theta)))
+        if eval_fns:
+            for k, fn in eval_fns.items():
+                hist[k].append(float(np.asarray(fn(st.theta))))
+
+    for t in range(T):
+        mask = coding.straggler_mask(mask_key, t, N, p)
+        g = float(gamma_fn(t)) if gamma_fn else gamma
+        kk = jax.random.fold_in(comp_key, t) if needs_key else None
+        if method == "uncompressed":
+            st = EF.uncompressed_step(st, grad_fn, W, mask, g, step=t)
+        elif method == "unbiased_diff":
+            st = EF.unbiased_diff_step(st, grad_fn, W, mask, g, compressor,
+                                       step=t, key=kk, alpha=diff_alpha)
+        else:
+            st = METHODS[method](st, grad_fn, W, mask, g, compressor,
+                                 step=t, key=kk)
+        if t % record_every == 0 or t == T - 1:
+            record(t)
+    return hist
+
+
+def run_trials(method: str, compressor, task="linreg", trials=5,
+               task_kwargs=None, **kw):
+    """Mean/std over `trials` independent trials (paper protocol)."""
+    curves = []
+    extras = {}
+    for s in range(trials):
+        if task == "linreg":
+            grad_fn, loss_fn, theta0, _ = tasks.linreg_task(
+                seed=s, **(task_kwargs or {}))
+            eval_fns = None
+        else:
+            grad_fn, loss_fn, theta0, ex = tasks.classification_task(
+                seed=s, **(task_kwargs or {}))
+            eval_fns = {"test_loss": lambda th: ex["test_metrics"](th)[0],
+                        "test_acc": lambda th: ex["test_metrics"](th)[1],
+                        "train_acc": lambda th: ex["train_metrics"](th)[1]}
+        hist = run_trial(method, compressor, grad_fn, loss_fn, theta0,
+                         seed=s, eval_fns=eval_fns, **kw)
+        curves.append(hist)
+    steps = curves[0]["step"]
+    out = {"step": steps}
+    for key in curves[0]:
+        if key == "step":
+            continue
+        arr = np.array([c[key] for c in curves])
+        out[key] = arr.mean(0).tolist()
+        out[key + "_std"] = arr.std(0).tolist()
+    return out
+
+
+def final(curve, key="loss"):
+    return curve[key][-1]

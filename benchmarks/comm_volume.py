@@ -1,0 +1,27 @@
+"""Communication-volume table: bits per device per iteration, per method.
+
+Equal-overhead pairs used throughout Sec. V:
+  COCO-EF(Sign)  == Unbiased(Sign)   (1 bit/coord + scales)
+  COCO-EF(TopK)  == Unbiased(RandK)  (K values + K indices)
+vs the uncompressed SGC baseline (32 bits/coord).
+"""
+from repro.core import compression as C
+
+D = 100  # paper's linreg dimensionality
+
+
+def run():
+    rows = []
+    for name, comp in [
+        ("sign (biased/unbiased)", C.GroupedSign()),
+        ("topk-2 / randk-2", C.TopK(k=2)),
+        ("uncompressed", C.Identity()),
+    ]:
+        bits = comp.wire_bits(D)
+        rows.append((name, bits, 32 * D / bits))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, bits, ratio in run():
+        print(f"{name:24s} bits/iter/device={bits:6d}  compression x{ratio:.1f}")

@@ -1,0 +1,26 @@
+"""Fig. 4: COCO-EF (Sign) under varying redundancy d_k at p=0.9.
+Claim: d_k 1 -> 10 improves strongly, then saturates."""
+import json
+from pathlib import Path
+
+from repro.core import compression as C
+
+from . import _repro_common as R
+
+OUT = Path(__file__).resolve().parents[1] / "results" / "repro"
+DS = [1, 2, 5, 10, 20]
+
+
+def run(trials=5, T=400):
+    res = {}
+    for d in DS:
+        res[f"d={d}"] = R.run_trials("cocoef", C.GroupedSign(), trials=trials,
+                                     d=d, p=0.9, gamma=1e-5, T=T)
+    OUT.mkdir(parents=True, exist_ok=True)
+    (OUT / "fig4.json").write_text(json.dumps(res, indent=1))
+    return res
+
+
+if __name__ == "__main__":
+    for k, v in run().items():
+        print(f"{k:8s} final_loss={v['loss'][-1]:.1f}")

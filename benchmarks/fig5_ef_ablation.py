@@ -1,0 +1,32 @@
+"""Fig. 5: error-feedback ablation (COCO-EF vs COCO), sign and top-K.
+Claim: COCO(TopK) stalls; COCO-EF converges; EF is essential."""
+import json
+from pathlib import Path
+
+from repro.core import compression as C
+
+from . import _repro_common as R
+
+OUT = Path(__file__).resolve().parents[1] / "results" / "repro"
+
+CASES = {
+    "cocoef_sign": ("cocoef", C.GroupedSign()),
+    "coco_sign": ("coco", C.GroupedSign()),
+    "cocoef_topk": ("cocoef", C.TopK(k=2)),
+    "coco_topk": ("coco", C.TopK(k=2)),
+}
+
+
+def run(trials=5, T=400):
+    res = {}
+    for name, (m, comp) in CASES.items():
+        res[name] = R.run_trials(m, comp, trials=trials, d=5, p=0.2,
+                                 gamma=1e-5, T=T)
+    OUT.mkdir(parents=True, exist_ok=True)
+    (OUT / "fig5.json").write_text(json.dumps(res, indent=1))
+    return res
+
+
+if __name__ == "__main__":
+    for k, v in run().items():
+        print(f"{k:14s} final_loss={v['loss'][-1]:.1f}")

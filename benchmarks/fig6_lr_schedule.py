@@ -1,0 +1,30 @@
+"""Fig. 6: constant vs decaying learning rate for COCO-EF (Sign).
+Protocol: p=0.5, d_k=2, constant gamma=2e-5 vs gamma_t=2e-5/sqrt(t+1).
+Claim: constant is significantly better (error-vector staleness)."""
+import json
+import math
+from pathlib import Path
+
+from repro.core import compression as C
+
+from . import _repro_common as R
+
+OUT = Path(__file__).resolve().parents[1] / "results" / "repro"
+
+
+def run(trials=5, T=400):
+    res = {
+        "constant": R.run_trials("cocoef", C.GroupedSign(), trials=trials,
+                                 d=2, p=0.5, gamma=2e-5, T=T),
+        "decaying": R.run_trials("cocoef", C.GroupedSign(), trials=trials,
+                                 d=2, p=0.5, T=T,
+                                 gamma_fn=lambda t: 2e-5 / math.sqrt(t + 1)),
+    }
+    OUT.mkdir(parents=True, exist_ok=True)
+    (OUT / "fig6.json").write_text(json.dumps(res, indent=1))
+    return res
+
+
+if __name__ == "__main__":
+    for k, v in run().items():
+        print(f"{k:10s} final_loss={v['loss'][-1]:.1f}")

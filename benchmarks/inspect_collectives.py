@@ -1,0 +1,144 @@
+"""Hillclimb helper: re-lower a cell and print the top collective ops by
+(trip-scaled) wire bytes, with their HLO metadata op_name — tells you
+exactly which model op generates the traffic.
+
+  PYTHONPATH=src python -m benchmarks.inspect_collectives \
+      --arch qwen1.5-110b --shape train_4k --mesh multi [--top 15]
+"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+import argparse
+import re
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--mode", default="cocoef")
+    ap.add_argument("--top", type=int, default=15)
+    ap.add_argument("--run-json", default=None)
+    ap.add_argument("--bytes", action="store_true", help="top ops by HBM bytes")
+    args = ap.parse_args()
+
+    import json
+
+    import jax
+
+    from repro.configs import get_arch
+    from repro.launch import hlo_cost
+    from repro.launch.hlo_analysis import _WIRE_FACTOR, _group_size
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.serve import build_serve_setup
+    from repro.launch.train import TrainRun, build_train_setup
+
+    spec = get_arch(args.arch)
+    shape = spec.shapes[args.shape]
+    mesh = make_production_mesh(multi_pod=args.mesh == "multi")
+    ndev = int(np.prod(mesh.devices.shape))
+
+    if shape.is_train:
+        extra = json.loads(args.run_json) if args.run_json else {}
+        setup = build_train_setup(spec, mesh, shape,
+                                  TrainRun(mode=args.mode, **extra))
+        sp = setup.input_specs()
+        compiled = jax.jit(setup.train_step).lower(
+            sp["params"], sp["e"], sp["opt"], sp["batch"], sp["step"],
+            sp["key"]).compile()
+    else:
+        setup = build_serve_setup(spec, mesh, shape)
+        kind = "decode" if shape.kind == "decode" else "prefill"
+        sp = setup.input_specs(kind)
+        if kind == "decode":
+            compiled = jax.jit(setup.decode_step,
+                               out_shardings=setup.decode_out_shardings
+                               ).lower(sp["params"], sp["caches"],
+                                       sp["inputs"], sp["pos"]).compile()
+        else:
+            compiled = jax.jit(setup.prefill_step,
+                               out_shardings=setup.prefill_out_shardings
+                               ).lower(sp["params"], sp["inputs"]).compile()
+
+    txt = compiled.as_text()
+    comps = hlo_cost.parse_computations(txt)
+
+    # build while multipliers per computation by walking from entry
+    mult = {}
+
+    def walk(name, m):
+        if name not in comps:
+            return
+        mult[name] = mult.get(name, 0) + m
+        for op in comps[name].ops:
+            if op.kind == "while":
+                tm = hlo_cost._TRIP.search(op.line)
+                trip = int(tm.group(1)) if tm else 1
+                bm = hlo_cost._CALLS.search(op.line)
+                if bm:
+                    walk(bm.group(1), m * trip)
+                cm = hlo_cost._COND.search(op.line)
+                if cm:
+                    walk(cm.group(1), m * trip)
+            elif op.kind in ("call", "conditional"):
+                bm = hlo_cost._CALLS.search(op.line)
+                if bm:
+                    walk(bm.group(1), m)
+
+    entry = None
+    for raw in txt.splitlines():
+        if raw.startswith("ENTRY"):
+            entry = hlo_cost._COMP_HDR.match(raw.strip()).group(1)
+            break
+    walk(entry, 1)
+
+    rows = []
+    meta_re = re.compile(r'op_name="([^"]*)"')
+    if args.bytes:
+        brows = []
+        for cname, m in mult.items():
+            comp = comps[cname]
+            for op in comp.ops:
+                if op.kind in hlo_cost._SKIP_KINDS or op.kind in (
+                        "while", "call", "conditional"):
+                    continue
+                b = hlo_cost._nbytes(op.rtype)
+                for o in op.operands:
+                    t = comp.symbols.get(o)
+                    if t:
+                        b += hlo_cost._nbytes(t)
+                mm = meta_re.search(op.line)
+                brows.append((b * m, op.kind, op.rtype[:44], m,
+                              mm.group(1)[:86] if mm else ""))
+        brows.sort(reverse=True)
+        print(f"total bytes {sum(r[0] for r in brows)/2**30:.1f} GiB/device")
+        for b, kind, rt, m, name in brows[:args.top]:
+            print(f"{b/2**30:9.2f} GiB x{m:5d} {kind:22s} {rt:44s} {name}")
+        return
+    for cname, m in mult.items():
+        for op in comps[cname].ops:
+            base = op.kind.split("-start")[0]
+            if base not in ("all-gather", "all-reduce", "reduce-scatter",
+                            "all-to-all", "collective-permute"):
+                continue
+            nb = hlo_cost._nbytes(op.rtype)
+            g = _group_size(op.line, ndev)
+            wire = nb * _WIRE_FACTOR[base](max(g, 1)) * m
+            mm = meta_re.search(op.line)
+            rows.append((wire, base, op.rtype[:48], g, m,
+                         mm.group(1)[:90] if mm else ""))
+    rows.sort(reverse=True)
+    total = sum(r[0] for r in rows)
+    print(f"total wire {total/2**30:.2f} GiB/device over {len(rows)} "
+          f"collective sites")
+    for wire, base, rt, g, m, name in rows[:args.top]:
+        print(f"{wire/2**30:8.2f} GiB x{m:3d} g={g:3d} {base:18s} {rt:48s} "
+              f"{name}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Microbenchmarks of the COCO-EF hot-path ops (jnp reference path — the
+numbers on CPU are for relative comparisons; Pallas engages on TPU)."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+
+def _time(fn, *args, iters=20):
+    fn(*args).block_until_ready() if hasattr(fn(*args), "block_until_ready") \
+        else jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run():
+    n, g = 1 << 22, 512     # 4M-element gradient slice
+    x = jax.random.normal(jax.random.PRNGKey(0), (n,))
+    e = jax.random.normal(jax.random.PRNGKey(1), (n,)) * 0.1
+
+    pack = jax.jit(lambda v: ref.sign_pack_ref(v, g))
+    fused = jax.jit(lambda a, b: ref.ef_sign_fused_ref(a, b, 0.01, 1.0, g))
+    topk = jax.jit(lambda v: ref.block_topk_ref(v, 16, 512))
+
+    w, s = pack(x)
+    unpack = jax.jit(lambda ww, ss: ref.sign_unpack_ref(ww, ss, g))
+
+    rows = [
+        ("sign_pack_4M", _time(pack, x), n * 4 / 8 / 1.0),   # bytes ratio
+        ("sign_unpack_4M", _time(unpack, w, s), 0),
+        ("ef_fused_4M", _time(fused, x, e), 0),
+        ("block_topk_4M", _time(topk, x), 0),
+    ]
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,117 @@
+"""Roofline table assembled from the cached dry-run artifacts.
+
+For each (arch x shape x mesh) cell: the three roofline terms, the dominant
+bottleneck, MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE), and the
+useful-compute ratio MODEL_FLOPS / HLO_FLOPS (catches remat/redundancy/
+padding waste — note gradient-coding redundancy d intentionally recomputes
+d x, so ~1/d is expected for train cells).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs import REGISTRY, STANDARD_SHAPES
+from repro.nn import Model
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+# active params per token (MoE: shared + top-k routed + attn + embed read)
+_ACTIVE_FRACTION_CACHE = {}
+
+
+def active_params(arch_id: str) -> int:
+    if arch_id in _ACTIVE_FRACTION_CACHE:
+        return _ACTIVE_FRACTION_CACHE[arch_id]
+    spec = REGISTRY[arch_id]
+    cfg = spec.config
+    total = Model(cfg).num_params()
+    if cfg.moe_experts:
+        # experts: only top_k (+ shared) of moe_experts are active
+        expert_p = cfg.moe_experts * cfg.moe_ff * cfg.d_model * 3
+        layers_with_moe = (cfg.num_layers - cfg.moe_first_dense
+                           if cfg.family == "deepseek" else cfg.num_layers)
+        total_expert = expert_p * layers_with_moe
+        active_expert = total_expert * cfg.moe_top_k / cfg.moe_experts
+        total = total - total_expert + active_expert
+    _ACTIVE_FRACTION_CACHE[arch_id] = int(total)
+    return int(total)
+
+
+def model_flops(arch_id: str, shape_name: str, n_code: int, b_loc: int,
+                seq: int, is_train: bool, batch: int) -> float:
+    """6*N*D for train (fwd+bwd), 2*N*D for inference, over the tokens the
+    cell actually processes (per step)."""
+    n_active = active_params(arch_id)
+    if is_train:
+        tokens = n_code * b_loc * seq      # includes coding redundancy
+        unique = REGISTRY[arch_id].shapes[shape_name].global_batch * seq
+        return 6.0 * n_active * tokens, 6.0 * n_active * unique
+    if shape_name.startswith("prefill"):
+        tokens = batch * seq
+    else:
+        tokens = batch                     # one new token per request
+    f = 2.0 * n_active * tokens
+    return f, f
+
+
+def load_cells(mode: str = "cocoef", tag: str = ""):
+    rows = []
+    sfx = f"_{tag}" if tag else ""
+    for f in sorted(RESULTS.glob(f"*__{mode}{sfx}.json")):
+        rec = json.loads(f.read_text())
+        rows.append(rec)
+    return rows
+
+
+def table(mode: str = "cocoef", tag: str = ""):
+    rows = []
+    for rec in load_cells(mode, tag):
+        if rec["status"] != "ok":
+            rows.append({**rec, "summary": rec.get("reason",
+                                                   rec.get("error", ""))})
+            continue
+        arch, shp, mesh = rec["arch"], rec["shape"], rec["mesh"]
+        ndev = 512 if mesh == "multi" else 256
+        is_train = shp.startswith("train")
+        mf_total, mf_unique = model_flops(
+            arch, shp, rec.get("n_code", 1), rec.get("b_loc", 0),
+            REGISTRY[arch].shapes[shp].seq_len, is_train,
+            REGISTRY[arch].shapes[shp].global_batch)
+        hlo_flops_total = rec["cost"].get("flops", 0.0) * ndev
+        r = rec["roofline"]
+        rows.append({
+            "arch": arch, "shape": shp, "mesh": mesh, "status": "ok",
+            "compute_s": r["compute_s"], "memory_s": r["memory_s"],
+            "collective_s": r["collective_s"], "dominant": r["dominant"],
+            "model_flops": mf_total, "model_flops_unique": mf_unique,
+            "hlo_flops_total": hlo_flops_total,
+            "useful_ratio": (mf_unique / hlo_flops_total
+                             if hlo_flops_total else 0.0),
+            "roofline_fraction": r["roofline_fraction"],
+            "peak_bytes": rec["memory"]["peak_estimate_bytes"],
+            "wire_bytes": rec["collectives"]["wire_bytes_per_device"],
+        })
+    return rows
+
+
+def main():
+    rows = table()
+    hdr = (f"{'arch':22s} {'shape':12s} {'mesh':6s} {'comp_ms':>8s} "
+           f"{'mem_ms':>8s} {'coll_ms':>8s} {'dom':>10s} {'useful':>7s} "
+           f"{'roofl%':>7s} {'peakGB':>7s}")
+    print(hdr)
+    for r in rows:
+        if r.get("status") != "ok":
+            print(f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:6s} "
+                  f"-- {r.get('summary','')[:60]}")
+            continue
+        print(f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:6s} "
+              f"{r['compute_s']*1e3:8.2f} {r['memory_s']*1e3:8.2f} "
+              f"{r['collective_s']*1e3:8.2f} {r['dominant']:>10s} "
+              f"{r['useful_ratio']:7.3f} {r['roofline_fraction']*100:6.1f}% "
+              f"{r['peak_bytes']/2**30:7.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""repro: COCO-EF (biased compression in gradient coding) as a JAX framework."""
+__version__ = "0.1.0"

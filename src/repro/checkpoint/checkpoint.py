@@ -1,0 +1,136 @@
+"""Fault-tolerant checkpointing for (params, EF state, optimizer, cursor).
+
+Format: one zstd-compressed msgpack-framed .npz-style file per step,
+written atomically (tmp + rename) so a crash mid-write never corrupts the
+latest checkpoint.  The data cursor is just the step counter (the synthetic
+pipeline is counter-addressable, repro.data.pipeline), so restart resumes
+exactly.
+
+Elasticity: COCO-EF's per-rank error vectors are tied to the coding-rank
+count N.  `elastic_rescale_ef` maps an EF state saved at N_old onto N_new
+ranks — kept ranks carry their error, new ranks start at e=0 (Theorem 1 is
+invariant to e_i^0 = 0 re-initialization; DESIGN.md Sec. 5).
+"""
+from __future__ import annotations
+
+import io
+import json
+import os
+import struct
+import tempfile
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import zstandard
+
+MAGIC = b"RPR1"
+
+
+def _tree_to_bufs(tree) -> Tuple[Dict, list]:
+    leaves, treedef = jax.tree.flatten(tree)
+    metas = []
+    bufs = []
+    for leaf in leaves:
+        arr = np.asarray(leaf)
+        metas.append({"shape": list(arr.shape), "dtype": str(arr.dtype)})
+        bufs.append(arr.tobytes())
+    return {"leaves": metas, "treedef": str(treedef)}, bufs
+
+
+def save_checkpoint(directory: str | Path, step: int, state: Dict[str, Any],
+                    extra: Optional[Dict] = None) -> Path:
+    """state: arbitrary pytree dict, e.g. {params, e, opt}.  Atomic."""
+    directory = Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+    trees = {}
+    blobs = []
+    for name, tree in state.items():
+        meta, bufs = _tree_to_bufs(tree)
+        meta["offsets"] = []
+        for b in bufs:
+            meta["offsets"].append(sum(len(x) for x in blobs))
+            blobs.append(b)
+        trees[name] = meta
+    header = json.dumps({"step": int(step), "trees": trees,
+                         "extra": extra or {}}).encode()
+    payload = b"".join(blobs)
+    comp = zstandard.ZstdCompressor(level=3).compress(payload)
+    final = directory / f"ckpt_{step:010d}.rpr"
+    with tempfile.NamedTemporaryFile(dir=directory, delete=False) as tmp:
+        tmp.write(MAGIC)
+        tmp.write(struct.pack("<QQ", len(header), len(comp)))
+        tmp.write(header)
+        tmp.write(comp)
+        tmp.flush()
+        os.fsync(tmp.fileno())
+        tmp_path = tmp.name
+    os.replace(tmp_path, final)               # atomic on POSIX
+    return final
+
+
+def latest_step(directory: str | Path) -> Optional[int]:
+    directory = Path(directory)
+    if not directory.exists():
+        return None
+    steps = [int(p.stem.split("_")[1]) for p in directory.glob("ckpt_*.rpr")]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str | Path, templates: Dict[str, Any],
+                       step: Optional[int] = None,
+                       shardings: Optional[Dict[str, Any]] = None
+                       ) -> Tuple[int, Dict[str, Any]]:
+    """templates: {name: pytree} giving structure; arrays are re-created
+    (and device_put with `shardings[name]` pytrees when given)."""
+    directory = Path(directory)
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    path = directory / f"ckpt_{step:010d}.rpr"
+    raw = path.read_bytes()
+    assert raw[:4] == MAGIC, "corrupt checkpoint"
+    hlen, clen = struct.unpack("<QQ", raw[4:20])
+    header = json.loads(raw[20:20 + hlen])
+    payload = zstandard.ZstdDecompressor().decompress(
+        raw[20 + hlen:20 + hlen + clen])
+
+    out = {}
+    for name, template in templates.items():
+        meta = header["trees"][name]
+        leaves_t, treedef = jax.tree.flatten(template)
+        arrs = []
+        for lm, off, lt in zip(meta["leaves"], meta["offsets"], leaves_t):
+            n = int(np.prod(lm["shape"])) if lm["shape"] else 1
+            a = np.frombuffer(payload, dtype=np.dtype(lm["dtype"]),
+                              count=n, offset=off).reshape(lm["shape"])
+            arrs.append(a)
+        tree = jax.tree.unflatten(treedef, arrs)
+        if shardings and name in shardings:
+            tree = jax.tree.map(jax.device_put, tree, shardings[name])
+        out[name] = tree
+    return header["step"], out
+
+
+def elastic_rescale_ef(e_old: np.ndarray, mesh_shape_old: Tuple[int, ...],
+                       mesh_shape_new: Tuple[int, ...],
+                       flat_pad_new: int) -> np.ndarray:
+    """Map EF state (devices..., flat) across a device-count change.
+
+    Coding ranks present in both grids keep their error vectors (truncated /
+    zero-padded to the new local flat size); new ranks start at zero.  The
+    sum over surviving e_i is preserved for surviving ranks, which is what
+    the virtual-sequence argument (Appendix C) needs.
+    """
+    e_old = np.asarray(e_old)
+    old_flat = e_old.shape[-1]
+    new = np.zeros(tuple(mesh_shape_new) + (flat_pad_new,), e_old.dtype)
+    common = tuple(min(a, b) for a, b in zip(mesh_shape_old, mesh_shape_new))
+    sl_old = tuple(slice(0, c) for c in common)
+    sl_new = tuple(slice(0, c) for c in common)
+    m = min(old_flat, flat_pad_new)
+    new[sl_new + (slice(0, m),)] = e_old[sl_old + (slice(0, m),)]
+    return new

@@ -1,0 +1,84 @@
+"""ArchSpec: one assigned architecture + its shape set + distribution plan."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+from repro.nn.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCfg:
+    kind: str            # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+    @property
+    def is_train(self) -> bool:
+        return self.kind == "train"
+
+
+# the assigned LM shape set (identical across archs; applicability varies)
+TRAIN_4K = ShapeCfg("train", 4096, 256)
+PREFILL_32K = ShapeCfg("prefill", 32768, 32)
+DECODE_32K = ShapeCfg("decode", 32768, 128)
+LONG_500K = ShapeCfg("decode", 524288, 1)
+
+STANDARD_SHAPES = {
+    "train_4k": TRAIN_4K,
+    "prefill_32k": PREFILL_32K,
+    "decode_32k": DECODE_32K,
+    "long_500k": LONG_500K,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class CodingPlan:
+    """How COCO-EF engages for this arch on the production mesh.
+
+    coding_axes: mesh axes forming the paper's 'devices' for gradient coding
+      (single-pod mesh drops 'pod' automatically).
+    redundancy: d_k — how many coding ranks hold each data subset.
+    straggler_p: Bernoulli straggler probability baked into encode weights.
+    group_size: sign-quantization group.
+    fsdp: shard parameters over the 'data' axis too (memory-bound archs);
+      when fsdp is on, coding runs over 'pod' only (DESIGN.md Sec. 5).
+    """
+
+    coding_axes: Tuple[str, ...] = ("pod", "data")
+    redundancy: int = 2
+    straggler_p: float = 0.1
+    group_size: int = 512
+    fsdp: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    arch_id: str
+    config: ModelConfig
+    smoke: ModelConfig
+    coding: CodingPlan
+    shapes: Dict[str, ShapeCfg]
+    skip_shapes: Dict[str, str] = dataclasses.field(default_factory=dict)
+    notes: str = ""
+
+    def shape(self, name: str) -> ShapeCfg:
+        if name in self.skip_shapes:
+            raise KeyError(f"{self.arch_id}: shape {name} skipped: "
+                           f"{self.skip_shapes[name]}")
+        return self.shapes[name]
+
+
+def lm_shapes(include_long: bool, long_reason: str = "",
+              include_decode: bool = True) -> Tuple[Dict, Dict]:
+    shapes = {"train_4k": TRAIN_4K, "prefill_32k": PREFILL_32K}
+    skips = {}
+    if include_decode:
+        shapes["decode_32k"] = DECODE_32K
+    if include_long:
+        shapes["long_500k"] = LONG_500K
+    else:
+        skips["long_500k"] = long_reason or (
+            "pure full-attention arch: 524k dense-KV decode is "
+            "quadratic-cost by design (assignment rule)")
+    return shapes, skips

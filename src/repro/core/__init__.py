@@ -1,0 +1,2 @@
+"""COCO-EF core: the paper's contribution (compression + coding + EF)."""
+from . import coding, collectives, compression, error_feedback, cocoef  # noqa: F401

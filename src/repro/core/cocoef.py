@@ -1,0 +1,157 @@
+"""COCO-EF as a production optimizer transform over device-local flat state.
+
+This is the piece that runs *inside* the fully-manual aggregation shard_map of
+`repro.launch.train` (stage 2 in DESIGN.md Sec. 2): every (coding-rank,
+tp-shard) device holds
+
+  g_local   : its slice of this rank's coded gradient, flattened + padded
+  e_local   : its slice of this rank's error vector  (Alg. 1 state)
+
+and produces the aggregated update slice `ghat_local` (identical across
+coding ranks, distinct across tp shards) plus the new error state.
+
+The math is Algorithm 1 exactly:
+  acc  = gamma * g + e
+  c    = C(acc)            (sign wire format; pack once, unpack locally)
+  ghat = sum_i mask_i c_i  (two-phase wire-compressed collective)
+  e'   = mask ? acc - c : e
+
+`mode` selects the paper's method or the baselines for A/B roofline runs:
+  cocoef       biased sign + error feedback            (proposed)
+  coco         biased sign, no error feedback          (Fig. 5 ablation)
+  dense        no compression (SGC [31]; the dense-psum baseline)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .collectives import (CodingCollectiveConfig, dense_allreduce, sign_pack,
+                          sign_unpack, two_phase_sign_allreduce)
+
+__all__ = ["CocoEFConfig", "FlatMeta", "flatten_local", "unflatten_local",
+           "padded_size", "cocoef_update", "coding_rank_index"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CocoEFConfig:
+    coding_axes: Tuple[str, ...] = ("data",)
+    group_size: int = 512
+    straggler_p: float = 0.0
+    mode: str = "cocoef"              # cocoef | coco | dense
+    ef_dtype: str = "float32"         # error-vector storage dtype
+    phase2_dtype: str = "float32"     # f32 = paper-faithful broadcast
+    phase2_sign: bool = False         # beyond-paper compressed broadcast
+    num_buckets: int = 1              # split flat vector for comm overlap
+
+    def collective(self) -> CodingCollectiveConfig:
+        return CodingCollectiveConfig(
+            coding_axes=self.coding_axes,
+            group_size=self.group_size,
+            phase2_dtype=jnp.dtype(self.phase2_dtype),
+            phase2_sign=self.phase2_sign)
+
+
+# --------------------------------------------------------------------------
+# local flatten/unflatten with padding
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FlatMeta:
+    shapes: Tuple[Tuple[int, ...], ...]
+    sizes: Tuple[int, ...]
+    dtypes: Tuple[str, ...]
+    padded: int
+
+
+def padded_size(total: int, chunk_ranks: int, group_size: int,
+                num_buckets: int = 1) -> int:
+    mult = chunk_ranks * group_size * num_buckets
+    return math.ceil(total / mult) * mult
+
+
+def flatten_local(leaves: Sequence[jnp.ndarray], chunk_ranks: int,
+                  group_size: int, num_buckets: int = 1
+                  ) -> Tuple[jnp.ndarray, FlatMeta]:
+    """Concat device-local leaf blocks into one padded f32 vector."""
+    sizes = tuple(int(l.size) for l in leaves)
+    total = sum(sizes)
+    padded = padded_size(total, chunk_ranks, group_size, num_buckets)
+    flat = jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in leaves])
+    flat = jnp.pad(flat, (0, padded - total))
+    meta = FlatMeta(shapes=tuple(tuple(l.shape) for l in leaves), sizes=sizes,
+                    dtypes=tuple(str(l.dtype) for l in leaves), padded=padded)
+    return flat, meta
+
+
+def unflatten_local(flat: jnp.ndarray, meta: FlatMeta) -> List[jnp.ndarray]:
+    out, off = [], 0
+    for shape, size, dt in zip(meta.shapes, meta.sizes, meta.dtypes):
+        out.append(lax.dynamic_slice_in_dim(flat, off, size)
+                   .reshape(shape).astype(jnp.dtype(dt)))
+        off += size
+    return out
+
+
+# --------------------------------------------------------------------------
+# the update (runs per device inside the fully-manual shard_map)
+# --------------------------------------------------------------------------
+
+def coding_rank_index(coding_axes: Sequence[str]) -> jnp.ndarray:
+    """Row-major linear index of this device among the coding ranks."""
+    idx = jnp.zeros((), jnp.int32)
+    for ax in coding_axes:
+        idx = idx * lax.axis_size(ax) + lax.axis_index(ax)
+    return idx
+
+
+def _bucketed(flat: jnp.ndarray, num_buckets: int):
+    return flat.reshape(num_buckets, -1)
+
+
+def cocoef_update(g_local: jnp.ndarray, e_local: jnp.ndarray,
+                  mask: jnp.ndarray, gamma, cfg: CocoEFConfig
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One Algorithm-1 update on the device-local flat slice.
+
+    g_local: (n,) local slice of this coding rank's coded gradient.
+    e_local: (n,) local slice of this rank's error vector (cfg.ef_dtype).
+    mask:    (n_coding,) straggler indicators I_i^t (same on all devices).
+    gamma:   scalar learning rate (may be traced — lr schedules).
+    Returns (ghat_local, new_e_local); ghat is sum_i mask_i C_or_id(acc_i),
+    already scaled by gamma per eq. (4): apply as  params -= ghat.
+    """
+    coll = cfg.collective()
+    my_idx = coding_rank_index(cfg.coding_axes)
+    my_mask = lax.dynamic_index_in_dim(mask, my_idx, keepdims=False)
+
+    if cfg.mode == "dense":
+        acc = gamma * g_local
+        ghat = dense_allreduce(acc, coll, mask)
+        return ghat, e_local
+
+    if cfg.mode == "coco":
+        acc = gamma * g_local
+    else:  # cocoef
+        acc = gamma * g_local + e_local.astype(jnp.float32)
+
+    ghat_parts, c_parts = [], []
+    for acc_b in _bucketed(acc, cfg.num_buckets):
+        words, scales = sign_pack(acc_b, cfg.group_size)
+        c_b = sign_unpack(words, scales, cfg.group_size)
+        ghat_parts.append(two_phase_sign_allreduce(c_b, coll, mask))
+        c_parts.append(c_b)
+    ghat = jnp.concatenate(ghat_parts)
+    c = jnp.concatenate(c_parts)
+
+    if cfg.mode == "coco":
+        new_e = e_local
+    else:
+        new_e = jnp.where(my_mask > 0, acc - c,
+                          e_local.astype(jnp.float32))
+    return ghat, new_e.astype(jnp.dtype(cfg.ef_dtype))

@@ -1,0 +1,117 @@
+"""Stochastic gradient coding: data allocation, encoding, straggler model.
+
+Implements the pairwise-balanced allocation of [31] (Sec. III of the paper),
+the encoding weights 1/(d_k (1-p)) of eq. (3), the Bernoulli straggler model
+of eq. (8), and the redundancy statistic theta (eq. 18).
+
+Allocation happens once before training (host-side, numpy-free: we use jax
+PRNG for reproducibility but materialize small static matrices).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "Allocation",
+    "random_allocation",
+    "cyclic_allocation",
+    "encode_weights",
+    "straggler_mask",
+    "redundancy_theta",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Allocation:
+    """Static data-to-device allocation.
+
+    S: (N, M) 0/1 matrix, S[i, k] = 1 iff subset k lives on device i.
+    """
+
+    S: np.ndarray  # (N, M) int8
+
+    @property
+    def num_devices(self) -> int:
+        return self.S.shape[0]
+
+    @property
+    def num_subsets(self) -> int:
+        return self.S.shape[1]
+
+    @property
+    def d(self) -> np.ndarray:
+        """d_k = number of devices holding subset k, shape (M,)."""
+        return self.S.sum(axis=0)
+
+    def subsets_of(self, device: int) -> np.ndarray:
+        return np.nonzero(self.S[device])[0]
+
+    def validate(self) -> None:
+        if (self.d == 0).any():
+            raise ValueError("every subset must be allocated to >=1 device")
+
+
+def random_allocation(seed: int, num_devices: int, num_subsets: int,
+                      d: int) -> Allocation:
+    """Uniform random allocation: subset k on d distinct random devices.
+
+    This is the paper's practical approximation of the pairwise-balanced
+    scheme (Sec. V.A): E[#devices holding both k1 and k2] = d^2/N.
+    """
+    rng = np.random.default_rng(seed)
+    S = np.zeros((num_devices, num_subsets), dtype=np.int8)
+    for k in range(num_subsets):
+        devs = rng.choice(num_devices, size=min(d, num_devices), replace=False)
+        S[devs, k] = 1
+    alloc = Allocation(S=S)
+    alloc.validate()
+    return alloc
+
+
+def cyclic_allocation(num_devices: int, num_subsets: int, d: int) -> Allocation:
+    """Deterministic cyclic allocation: subset k on devices k, k+1, ..., k+d-1
+    (mod N).  Exactly pairwise balanced when M = N (each pair of subsets at
+    distance < d shares d - dist devices; used for regression tests where a
+    deterministic S is wanted)."""
+    S = np.zeros((num_devices, num_subsets), dtype=np.int8)
+    for k in range(num_subsets):
+        for j in range(min(d, num_devices)):
+            S[(k + j) % num_devices, k] = 1
+    alloc = Allocation(S=S)
+    alloc.validate()
+    return alloc
+
+
+def encode_weights(alloc: Allocation, p: float) -> jnp.ndarray:
+    """W[i, k] = S[i, k] / (d_k * (1 - p))   (eq. 3).
+
+    Multiplying the (M, D) per-subset gradient stack by W yields the (N, D)
+    coded vectors g_i^t.
+    """
+    if not 0.0 <= p < 1.0:
+        raise ValueError(f"straggler probability p={p} must be in [0, 1)")
+    d = alloc.d.astype(np.float64)
+    W = alloc.S.astype(np.float64) / (d[None, :] * (1.0 - p))
+    return jnp.asarray(W, dtype=jnp.float32)
+
+
+def straggler_mask(key: jax.Array, step: jax.Array | int, num_devices: int,
+                   p: float) -> jnp.ndarray:
+    """I^t in {0,1}^N: device i participates iff mask[i] = 1  (eq. 8).
+
+    Deterministic in (key, step) so every mesh rank / host derives the same
+    mask without communication (DESIGN.md Sec. 2).
+    """
+    k = jax.random.fold_in(key, jnp.asarray(step, dtype=jnp.uint32))
+    return (jax.random.uniform(k, (num_devices,)) >= p).astype(jnp.float32)
+
+
+def redundancy_theta(alloc: Allocation) -> float:
+    """theta = sum_k (1/d_k - 1/N)   (eq. 18).  0 when d_k = N (full replication)."""
+    d = alloc.d.astype(np.float64)
+    return float(np.sum(1.0 / d - 1.0 / alloc.num_devices))

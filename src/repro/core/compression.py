@@ -1,0 +1,247 @@
+"""Compression functions for COCO-EF and baselines.
+
+Implements the paper's two biased compressors (Sec. III):
+  * grouped sign-bit quantization  C_m(g_m) = sign(g_m) * ||g_m||_1 / |I_m|
+  * top-K sparsification (exact global and TPU-friendly block-local)
+and the unbiased compressors used by the baselines of Sec. V:
+  * stochastic sign (1-bit) quantization   (Unbiased (Sign),  [32])
+  * amplified rand-K sparsification        (Unbiased (Rand-K), [14])
+
+Every compressor exposes:
+  apply(x, key=None) -> C(x)      same shape/dtype as x (the decompressed value)
+  wire_bits(n)       -> int       bits on the wire for an n-element input
+  delta(n)           -> float     contraction constant (biased compressors only):
+                                  E||C(x) - x||^2 <= delta * ||x||^2
+
+All `apply` implementations are pure jnp (jit / vmap / grad-safe, static
+shapes).  The Pallas kernels in `repro.kernels` implement the same math for
+the packed wire format; `tests/test_kernels.py` checks them against these
+references.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "Compressor",
+    "GroupedSign",
+    "TopK",
+    "BlockTopK",
+    "StochasticSign",
+    "RandK",
+    "Identity",
+    "get_compressor",
+]
+
+
+def _strict_sign(x: jnp.ndarray) -> jnp.ndarray:
+    """sign with sign(0) := +1 so the output is exactly 1-bit representable."""
+    return jnp.where(x >= 0, jnp.ones_like(x), -jnp.ones_like(x))
+
+
+@dataclasses.dataclass(frozen=True)
+class Compressor:
+    """Base class; subclasses are frozen dataclasses => valid static args."""
+
+    #: True if E[C(x)] = x over the compressor's internal randomness.
+    unbiased: bool = dataclasses.field(default=False, init=False)
+
+    def apply(self, x: jnp.ndarray, key: Optional[jax.Array] = None) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def wire_bits(self, n: int) -> int:
+        raise NotImplementedError
+
+    def delta(self, n: int) -> float:  # contraction constant of Assumption 5
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class Identity(Compressor):
+    """No compression (the delta=0 'optimal performance bound' of Sec. IV)."""
+
+    def apply(self, x, key=None):
+        return x
+
+    def wire_bits(self, n):
+        return 32 * n
+
+    def delta(self, n):
+        return 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupedSign(Compressor):
+    """Grouped sign-bit quantization, eq. (5)-(6).
+
+    group_size <= 0 means a single group over the whole vector (M0 = 1,
+    plain sign-bit quantization).  delta = 1 - 1/|I_m|  (Prop. 2).
+    """
+
+    group_size: int = -1
+
+    def _groups(self, n: int) -> int:
+        g = n if self.group_size <= 0 else self.group_size
+        if n % g != 0:
+            raise ValueError(f"group_size {g} must divide n={n}; pad upstream")
+        return g
+
+    def apply(self, x, key=None):
+        shape, dtype = x.shape, x.dtype
+        flat = x.reshape(-1)
+        g = self._groups(flat.shape[0])
+        grouped = flat.reshape(-1, g)
+        scale = jnp.mean(jnp.abs(grouped), axis=-1, keepdims=True)  # ||.||_1/|I_m|
+        out = _strict_sign(grouped) * scale
+        return out.reshape(shape).astype(dtype)
+
+    def wire_bits(self, n):
+        g = self._groups(n)
+        return n + 32 * (n // g)  # 1 bit/coord + one f32 scale per group
+
+    def delta(self, n):
+        g = self._groups(n)
+        return 1.0 - 1.0 / g
+
+
+@dataclasses.dataclass(frozen=True)
+class TopK(Compressor):
+    """Exact global top-K magnitude sparsification.  delta = 1 - K/D."""
+
+    k: int = 1
+
+    def apply(self, x, key=None):
+        shape, dtype = x.shape, x.dtype
+        flat = x.reshape(-1)
+        n = flat.shape[0]
+        k = min(self.k, n)
+        _, idx = jax.lax.top_k(jnp.abs(flat), k)
+        mask = jnp.zeros((n,), dtype=bool).at[idx].set(True)
+        return jnp.where(mask, flat, 0).reshape(shape).astype(dtype)
+
+    def wire_bits(self, n):
+        k = min(self.k, n)
+        return k * (32 + 32)  # value + index per kept coordinate
+
+    def delta(self, n):
+        return 1.0 - min(self.k, n) / n
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockTopK(Compressor):
+    """Block-local top-k: top-`k_per_block` within each contiguous block.
+
+    TPU-native adaptation of top-K (DESIGN.md Sec. 2): fixed-shape payloads,
+    no global sort.  Still a contraction with delta = 1 - k/B per block, hence
+    delta = 1 - k_per_block/block_size globally.
+    """
+
+    k_per_block: int = 8
+    block_size: int = 256
+
+    def apply(self, x, key=None):
+        shape, dtype = x.shape, x.dtype
+        flat = x.reshape(-1)
+        n = flat.shape[0]
+        b = self.block_size
+        if n % b != 0:
+            raise ValueError(f"block_size {b} must divide n={n}; pad upstream")
+        blocks = flat.reshape(-1, b)
+        k = min(self.k_per_block, b)
+        # threshold = k-th largest magnitude per block
+        topv = jax.lax.top_k(jnp.abs(blocks), k)[0]
+        thr = topv[:, -1:]
+        keep = jnp.abs(blocks) >= thr
+        # break magnitude ties so exactly k survive per block: rank by (|x|, -pos)
+        # cumulative count of keeps, capped at k
+        cum = jnp.cumsum(keep.astype(jnp.int32), axis=-1)
+        keep = keep & (cum <= k)
+        out = jnp.where(keep, blocks, 0)
+        return out.reshape(shape).astype(dtype)
+
+    def wire_bits(self, n):
+        b = self.block_size
+        k = min(self.k_per_block, b)
+        nblocks = n // b
+        return nblocks * k * (32 + 16)  # value + in-block index (<=65536)
+
+    def delta(self, n):
+        return 1.0 - min(self.k_per_block, self.block_size) / self.block_size
+
+
+@dataclasses.dataclass(frozen=True)
+class StochasticSign(Compressor):
+    """Unbiased per-group stochastic 1-bit quantization (baseline of [32]).
+
+    Per group with m = max|x|: Q_j = m * (2*B_j - 1), B_j ~ Bern((1+x_j/m)/2).
+    E[Q_j] = x_j.  Wire format identical to GroupedSign (1 bit + scale).
+    """
+
+    group_size: int = -1
+    unbiased: bool = dataclasses.field(default=True, init=False)
+
+    def apply(self, x, key=None):
+        if key is None:
+            raise ValueError("StochasticSign requires a PRNG key")
+        shape, dtype = x.shape, x.dtype
+        flat = x.reshape(-1).astype(jnp.float32)
+        g = flat.shape[0] if self.group_size <= 0 else self.group_size
+        grouped = flat.reshape(-1, g)
+        m = jnp.max(jnp.abs(grouped), axis=-1, keepdims=True)
+        m = jnp.where(m == 0, 1.0, m)
+        p_up = 0.5 * (1.0 + grouped / m)
+        u = jax.random.uniform(key, grouped.shape)
+        out = jnp.where(u < p_up, m, -m)
+        # exactly-zero groups stay zero (m replaced by 1 only to avoid 0/0)
+        out = jnp.where(jnp.max(jnp.abs(grouped), -1, keepdims=True) == 0, 0.0, out)
+        return out.reshape(shape).astype(dtype)
+
+    def wire_bits(self, n):
+        g = n if self.group_size <= 0 else self.group_size
+        return n + 32 * (n // g)
+
+
+@dataclasses.dataclass(frozen=True)
+class RandK(Compressor):
+    """Amplified rand-K sparsification [14]: keep K uniform coords * (D/K)."""
+
+    k: int = 1
+    unbiased: bool = dataclasses.field(default=True, init=False)
+
+    def apply(self, x, key=None):
+        if key is None:
+            raise ValueError("RandK requires a PRNG key")
+        shape, dtype = x.shape, x.dtype
+        flat = x.reshape(-1)
+        n = flat.shape[0]
+        k = min(self.k, n)
+        idx = jax.random.choice(key, n, shape=(k,), replace=False)
+        mask = jnp.zeros((n,), dtype=bool).at[idx].set(True)
+        out = jnp.where(mask, flat * (n / k), 0)
+        return out.reshape(shape).astype(dtype)
+
+    def wire_bits(self, n):
+        k = min(self.k, n)
+        return k * (32 + 32)
+
+
+_REGISTRY = {
+    "identity": Identity,
+    "sign": GroupedSign,
+    "grouped_sign": GroupedSign,
+    "topk": TopK,
+    "block_topk": BlockTopK,
+    "stochastic_sign": StochasticSign,
+    "randk": RandK,
+}
+
+
+def get_compressor(name: str, **kwargs) -> Compressor:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown compressor {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name](**kwargs)

@@ -1,0 +1,1 @@
+from . import tasks, pipeline  # noqa: F401

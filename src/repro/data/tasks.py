@@ -1,0 +1,170 @@
+"""The paper's two experimental tasks (Sec. V), built as grad_fn factories.
+
+Both return `(grad_fn, loss_fn, theta0, extras)` where
+  grad_fn(theta) -> (M, D) per-subset gradient stack  (feeds eq. 3)
+  loss_fn(theta) -> scalar F(theta) = sum_k f_k(theta)
+
+Task A (Sec. V.A): linear regression on synthetic data.
+  N = M = 100, z_k ~ N(0, 100) in R^100, y_k ~ N(<z_k, theta_hat>, 1),
+  f_k(theta) = 0.5 (<theta, z_k> - y_k)^2.
+
+Task B (Sec. V.B): heterogeneous image classification.  The paper uses MNIST
+with label-sharded subsets; MNIST is not available offline, so we generate a
+synthetic 10-class image set with the same *heterogeneity protocol* (every
+subset holds a single class) and train a small CNN with cross-entropy.  The
+claims being validated (biased+EF > unbiased at equal bits; improvement with
+d_k) are protocol-level, not dataset-specific.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["linreg_task", "classification_task", "ClassificationModel"]
+
+
+def linreg_task(seed: int = 0, num_subsets: int = 100, dim: int = 100):
+    """Paper Sec. V.A synthetic linear regression."""
+    rng = np.random.default_rng(seed)
+    Z = rng.normal(0.0, 10.0, size=(num_subsets, dim))  # N(0, var=100)
+    theta_hat = rng.normal(0.0, 1.0, size=(dim,))
+    y = Z @ theta_hat + rng.normal(0.0, 1.0, size=(num_subsets,))
+    theta0 = rng.normal(0.0, 1.0, size=(dim,))
+
+    Zj = jnp.asarray(Z, jnp.float32)
+    yj = jnp.asarray(y, jnp.float32)
+
+    def grad_fn(theta: jnp.ndarray) -> jnp.ndarray:
+        resid = Zj @ theta - yj                      # (M,)
+        return resid[:, None] * Zj                   # (M, D)
+
+    def loss_fn(theta: jnp.ndarray) -> jnp.ndarray:
+        resid = Zj @ theta - yj
+        return 0.5 * jnp.sum(resid ** 2)
+
+    return grad_fn, loss_fn, jnp.asarray(theta0, jnp.float32), dict(Z=Zj, y=yj)
+
+
+# --------------------------------------------------------------------------
+# Task B: heterogeneous classification with a small CNN
+# --------------------------------------------------------------------------
+
+class ClassificationModel(NamedTuple):
+    """Tiny CNN: conv(1->8, 3x3) - relu - pool2 - conv(8->16, 3x3) - relu -
+    pool2 - dense(10).  Parameters are handled as a flat vector so the coding
+    layer (which is per-coordinate) applies unchanged."""
+
+    img: int
+    unravel: Callable
+    dim: int
+
+
+def _init_cnn(key, img: int):
+    k1, k2, k3 = jax.random.split(key, 3)
+    params = {
+        "w1": jax.random.normal(k1, (3, 3, 1, 8)) * (2.0 / 9) ** 0.5,
+        "b1": jnp.zeros((8,)),
+        "w2": jax.random.normal(k2, (3, 3, 8, 16)) * (2.0 / 72) ** 0.5,
+        "b2": jnp.zeros((16,)),
+        "w3": jax.random.normal(k3, ((img // 4) ** 2 * 16, 10)) * 0.05,
+        "b3": jnp.zeros((10,)),
+    }
+    from jax.flatten_util import ravel_pytree
+    flat, unravel = ravel_pytree(params)
+    return flat, unravel
+
+
+def _cnn_logits(params, x):
+    """x: (B, img, img, 1) -> (B, 10)."""
+    h = jax.lax.conv_general_dilated(
+        x, params["w1"], (1, 1), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC")) + params["b1"]
+    h = jax.nn.relu(h)
+    h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                              (1, 2, 2, 1), "VALID")
+    h = jax.lax.conv_general_dilated(
+        h, params["w2"], (1, 1), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC")) + params["b2"]
+    h = jax.nn.relu(h)
+    h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                              (1, 2, 2, 1), "VALID")
+    h = h.reshape(h.shape[0], -1)
+    return h @ params["w3"] + params["b3"]
+
+
+def classification_task(seed: int = 0, num_subsets: int = 100,
+                        samples_per_subset: int = 16, img: int = 14,
+                        test_samples: int = 512):
+    """Synthetic heterogeneous 10-class image classification (Sec. V.B
+    protocol: every subset single-class => maximal label heterogeneity)."""
+    rng = np.random.default_rng(seed)
+    # class templates: smooth random blobs
+    templates = rng.normal(0, 1, size=(10, img, img))
+    # low-pass each template so classes are distinguishable but overlapping
+    kern = np.ones((3, 3)) / 9.0
+    for c in range(10):
+        t = templates[c]
+        for _ in range(2):
+            t = np.pad(t, 1, mode="edge")
+            t = sum(t[i:i + img, j:j + img] * kern[i, j]
+                    for i in range(3) for j in range(3))
+        templates[c] = t / (np.abs(t).max() + 1e-9)
+
+    subset_class = np.arange(num_subsets) % 10
+    rng.shuffle(subset_class)
+    noise = 0.6
+
+    def make_split(n_per, classes):
+        xs, ys = [], []
+        for c in classes:
+            x = templates[c][None] + noise * rng.normal(0, 1, (n_per, img, img))
+            xs.append(x)
+            ys.append(np.full((n_per,), c))
+        return (np.concatenate(xs).astype(np.float32),
+                np.concatenate(ys).astype(np.int32))
+
+    X = np.stack([templates[c][None] + noise * rng.normal(0, 1, (samples_per_subset, img, img))
+                  for c in subset_class])                   # (M, S, img, img)
+    Y = np.stack([np.full((samples_per_subset,), c) for c in subset_class])
+    Xte, Yte = make_split(test_samples // 10, np.arange(10))
+
+    Xj = jnp.asarray(X[..., None])      # (M, S, img, img, 1)
+    Yj = jnp.asarray(Y)
+    Xte_j = jnp.asarray(Xte[..., None])
+    Yte_j = jnp.asarray(Yte)
+
+    key = jax.random.PRNGKey(seed + 1)
+    theta0, unravel = _init_cnn(key, img)
+    model = ClassificationModel(img=img, unravel=unravel, dim=theta0.shape[0])
+
+    def subset_loss(theta, x, y):
+        logits = _cnn_logits(unravel(theta), x)
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+    def grad_fn(theta):
+        return jax.vmap(lambda x, y: jax.grad(subset_loss)(theta, x, y))(Xj, Yj)
+
+    def loss_fn(theta):
+        return jnp.sum(jax.vmap(lambda x, y: subset_loss(theta, x, y))(Xj, Yj))
+
+    def test_metrics(theta):
+        logits = _cnn_logits(unravel(theta), Xte_j)
+        logp = jax.nn.log_softmax(logits)
+        loss = -jnp.mean(jnp.take_along_axis(logp, Yte_j[:, None], axis=1))
+        acc = jnp.mean((jnp.argmax(logits, -1) == Yte_j).astype(jnp.float32))
+        return loss, acc
+
+    def train_metrics(theta):
+        logits = _cnn_logits(unravel(theta), Xj.reshape(-1, img, img, 1))
+        yflat = Yj.reshape(-1)
+        logp = jax.nn.log_softmax(logits)
+        loss = -jnp.mean(jnp.take_along_axis(logp, yflat[:, None], axis=1))
+        acc = jnp.mean((jnp.argmax(logits, -1) == yflat).astype(jnp.float32))
+        return loss, acc
+
+    return grad_fn, loss_fn, theta0, dict(model=model, test_metrics=test_metrics,
+                                          train_metrics=train_metrics)

@@ -1,0 +1,2 @@
+"""Pallas TPU kernels for the COCO-EF wire format + oracles (ref.py)."""
+from . import ops, ref  # noqa: F401

@@ -1,0 +1,82 @@
+"""Pallas TPU flash-style attention (VMEM-resident KV, q-block grid).
+
+The gemma2 train cell's memory term is dominated by S x S score traffic
+(EXPERIMENTS.md §Perf): XLA materializes the (B,S,H,S) score tensor in HBM
+each pass.  This kernel keeps one q block + the full K/V of one kv-head in
+VMEM and never writes scores to HBM:
+
+  grid  (batch, q_heads, S // BLK_Q)
+  q     block (1, 1, BLK_Q, hd)   VMEM
+  k, v  block (1, 1, S, hd)       VMEM (kv-head = q_head // group)
+  out   block (1, 1, BLK_Q, hd)   VMEM
+
+Supports causal masking, sliding windows and gemma2's logit softcap.
+VMEM budget limits S to ~8k at hd<=288 — the train_4k / smoke regime; the
+32k prefill path stays on the XLA implementation.
+
+Backward: custom_vjp recomputes attention per kv block in pure JAX
+(repro.nn.layers chunked path) — fwd gets kernel speed, bwd is the
+standard recompute strategy.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLK_Q = 256
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, softcap: float,
+                  window: int, blk_q: int):
+    i = pl.program_id(2)
+    q = q_ref[0, 0].astype(jnp.float32)              # (blk_q, hd)
+    k = k_ref[0, 0].astype(jnp.float32)              # (S, hd)
+    v = v_ref[0, 0].astype(jnp.float32)
+    S = k.shape[0]
+    q_pos = i * blk_q + jax.lax.broadcasted_iota(jnp.int32, (blk_q, 1), 0)
+    k_pos = jax.lax.broadcasted_iota(jnp.int32, (1, S), 1)
+
+    s = q @ k.T                                      # (blk_q, S) — VMEM only
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    keep = (k_pos <= q_pos) & (k_pos > q_pos - window)
+    s = jnp.where(keep, s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = (p @ v) / jnp.maximum(l, 1e-30)
+    o_ref[0, 0] = o.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "window", "groups",
+                                             "interpret"))
+def flash_attention(q, k, v, *, softcap: float = 0.0, window: int = 0,
+                    groups: int = 1, interpret: bool = True):
+    """q: (B, H, S, hd) pre-scaled; k, v: (B, Hkv, S, hd) with
+    H = groups * Hkv.  Causal (+ sliding window) attention output
+    (B, H, S, hd)."""
+    B, H, S, hd = q.shape
+    w = window if window > 0 else (1 << 30)
+    blk_q = min(BLK_Q, S)
+    grid = (B, H, S // blk_q)
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, softcap=softcap, window=w,
+                          blk_q=blk_q),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, blk_q, hd), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, S, hd),
+                         lambda b, h, i, g=groups: (b, h // g, 0, 0)),
+            pl.BlockSpec((1, 1, S, hd),
+                         lambda b, h, i, g=groups: (b, h // g, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, blk_q, hd),
+                               lambda b, h, i: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, hd), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,51 @@
+"""Jit'd public wrappers: pick the Pallas kernel or the jnp reference.
+
+On TPU the Pallas path lowers to Mosaic; on CPU (this container) it runs in
+interpret mode.  `use_pallas=False` (the default inside the dry-run
+lowering) uses the pure-jnp reference — identical math, so roofline terms
+are unaffected."""
+from __future__ import annotations
+
+import jax
+
+from . import ref, sign_pack as sp, topk_block as tb
+
+
+def default_use_pallas() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def sign_pack(x, group_size: int, use_pallas=None):
+    use = default_use_pallas() if use_pallas is None else use_pallas
+    if use:
+        return sp.sign_pack(x, group_size,
+                            interpret=jax.default_backend() != "tpu")
+    return ref.sign_pack_ref(x, group_size)
+
+
+def sign_unpack(words, scales, group_size: int):
+    return ref.sign_unpack_ref(words, scales, group_size)
+
+
+def ef_sign_fused(g, e, gamma, mask_self, group_size: int, use_pallas=None):
+    use = default_use_pallas() if use_pallas is None else use_pallas
+    if use:
+        return sp.ef_sign_fused(g, e, gamma, mask_self, group_size,
+                                interpret=jax.default_backend() != "tpu")
+    return ref.ef_sign_fused_ref(g, e, gamma, mask_self, group_size)
+
+
+def sign_decode_reduce(words, scales, mask, group_size: int, use_pallas=None):
+    use = default_use_pallas() if use_pallas is None else use_pallas
+    if use:
+        return sp.sign_decode_reduce(words, scales, mask, group_size,
+                                     interpret=jax.default_backend() != "tpu")
+    return ref.sign_decode_reduce_ref(words, scales, mask, group_size)
+
+
+def block_topk(x, k: int, block_size: int, use_pallas=None):
+    use = default_use_pallas() if use_pallas is None else use_pallas
+    if use:
+        return tb.block_topk(x, k, block_size,
+                             interpret=jax.default_backend() != "tpu")
+    return ref.block_topk_ref(x, k, block_size)

@@ -1,0 +1,89 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+These define the semantics; the Pallas kernels must match them (allclose,
+or bit-exact where noted) across the shape/dtype sweeps in
+tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def sign_pack_ref(x: jnp.ndarray, group_size: int
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (n,) f32 -> (words (n/32,) u32, scales (n/g,) f32).
+    scales = mean |x| per group; bit j of word w = x[32w+j] >= 0."""
+    xf = x.astype(jnp.float32)
+    scales = jnp.mean(jnp.abs(xf.reshape(-1, group_size)), axis=-1)
+    bits = (xf >= 0).reshape(-1, 32).astype(jnp.uint32)
+    words = (bits << jnp.arange(32, dtype=jnp.uint32)).sum(-1, dtype=jnp.uint32)
+    return words, scales
+
+
+def sign_unpack_ref(words: jnp.ndarray, scales: jnp.ndarray,
+                    group_size: int) -> jnp.ndarray:
+    bits = (words[:, None] >> jnp.arange(32, dtype=jnp.uint32)) & jnp.uint32(1)
+    signs = bits.astype(jnp.float32).reshape(-1) * 2.0 - 1.0
+    n = signs.shape[0]
+    per = jnp.repeat(scales.astype(jnp.float32), group_size,
+                     total_repeat_length=n)
+    return signs * per
+
+
+def ef_sign_fused_ref(g: jnp.ndarray, e: jnp.ndarray, gamma, mask_self,
+                      group_size: int):
+    """Fused Algorithm-1 local step (one pass over the model-sized vectors):
+      acc = gamma * g + e
+      (words, scales) = sign_pack(acc)
+      c = sign_unpack(words, scales)
+      e_new = mask_self ? acc - c : e
+    Returns (words, scales, c, e_new)."""
+    acc = gamma * g.astype(jnp.float32) + e.astype(jnp.float32)
+    words, scales = sign_pack_ref(acc, group_size)
+    c = sign_unpack_ref(words, scales, group_size)
+    e_new = jnp.where(mask_self > 0, acc - c, e.astype(jnp.float32))
+    return words, scales, c, e_new
+
+
+def sign_decode_reduce_ref(words: jnp.ndarray, scales: jnp.ndarray,
+                           mask: jnp.ndarray, group_size: int) -> jnp.ndarray:
+    """Server-side decode+aggregate: words (N, n/32), scales (N, n/g),
+    mask (N,) -> sum_i mask_i * unpack(words_i, scales_i)   (n,)."""
+    dec = jax.vmap(lambda w, s: sign_unpack_ref(w, s, group_size)
+                   )(words, scales)
+    return (mask[:, None] * dec).sum(0)
+
+
+def block_topk_ref(x: jnp.ndarray, k: int, block_size: int) -> jnp.ndarray:
+    """Block-local top-k sparsification (repro.core.compression.BlockTopK):
+    keep the k largest-|.| entries of each contiguous block."""
+    blocks = x.reshape(-1, block_size)
+    topv = jax.lax.top_k(jnp.abs(blocks), k)[0]
+    thr = topv[:, -1:]
+    keep = jnp.abs(blocks) >= thr
+    cum = jnp.cumsum(keep.astype(jnp.int32), axis=-1)
+    keep = keep & (cum <= k)
+    return jnp.where(keep, blocks, 0).reshape(x.shape)
+
+
+def flash_attention_ref(q, k, v, softcap: float = 0.0, window: int = 0,
+                        groups: int = 1):
+    """q: (B,H,S,hd) pre-scaled; k,v: (B,Hkv,S,hd).  Causal+window+softcap."""
+    B, H, S, hd = q.shape
+    w = window if window > 0 else (1 << 30)
+    kk = jnp.repeat(k, groups, axis=1)
+    vv = jnp.repeat(v, groups, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32))
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    qp = jnp.arange(S)[:, None]
+    kp = jnp.arange(S)[None, :]
+    keep = (kp <= qp) & (kp > qp - w)
+    s = jnp.where(keep[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32)
+                      ).astype(q.dtype)

@@ -1,0 +1,163 @@
+"""Pallas TPU kernels for the sign wire format (pack / unpack-reduce).
+
+These are the per-iteration hot spots of COCO-EF: every training step each
+rank makes one pass over its model-sized accumulator to (a) compress it to
+the wire format and (b) update the error vector.  Fusing the whole local
+step (ef_sign_fused) turns three HBM round-trips (acc, C(acc), e') into one.
+
+Tiling: the flat vector is processed as (rows of ROW_GROUPS groups) x
+(group_size lanes).  group_size is a multiple of 128 (lane width) and 32
+(bit-pack word), so every BlockSpec is MXU/VPU aligned:
+
+  x block      (G_BLK, group)            f32   VMEM
+  words block  (G_BLK, group // 32)      u32   VMEM
+  scales block (G_BLK, 1)                f32   VMEM
+
+On this CPU container the kernels run with interpret=True (pure-JAX
+semantics) and are validated against kernels/ref.py; on real TPU the same
+pallas_call lowers to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+G_BLK = 8  # groups per grid step
+
+
+def _pack_block(x_blk):
+    """x_blk: (G_BLK, group) f32 -> (words (G_BLK, group//32) u32,
+    scales (G_BLK, 1) f32)."""
+    g = x_blk.shape[-1]
+    scales = jnp.mean(jnp.abs(x_blk), axis=-1, keepdims=True)     # (G,1)
+    bits = (x_blk >= 0).reshape(G_BLK, g // 32, 32).astype(jnp.uint32)
+    words = (bits << jnp.arange(32, dtype=jnp.uint32)).sum(
+        -1, dtype=jnp.uint32)                                     # (G, g/32)
+    return words, scales
+
+
+def _sign_pack_kernel(x_ref, words_ref, scales_ref):
+    words, scales = _pack_block(x_ref[...].astype(jnp.float32))
+    words_ref[...] = words
+    scales_ref[...] = scales
+
+
+@functools.partial(jax.jit, static_argnames=("group_size", "interpret"))
+def sign_pack(x: jnp.ndarray, group_size: int, interpret: bool = True
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (n,) f32, n % (G_BLK * group_size) == 0."""
+    n = x.shape[0]
+    ng = n // group_size
+    xg = x.reshape(ng, group_size)
+    grid = (ng // G_BLK,)
+    words, scales = pl.pallas_call(
+        _sign_pack_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((G_BLK, group_size), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((G_BLK, group_size // 32), lambda i: (i, 0)),
+            pl.BlockSpec((G_BLK, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((ng, group_size // 32), jnp.uint32),
+            jax.ShapeDtypeStruct((ng, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xg)
+    return words.reshape(-1), scales.reshape(-1)
+
+
+def _ef_fused_kernel(g_ref, e_ref, gamma_ref, mask_ref,
+                     words_ref, scales_ref, c_ref, enew_ref):
+    gamma = gamma_ref[0]
+    mask = mask_ref[0]
+    acc = gamma * g_ref[...].astype(jnp.float32) + e_ref[...].astype(jnp.float32)
+    words, scales = _pack_block(acc)
+    c = (jnp.where(acc >= 0, 1.0, -1.0) * scales)                  # (G, group)
+    words_ref[...] = words
+    scales_ref[...] = scales
+    c_ref[...] = c
+    enew_ref[...] = jnp.where(mask > 0, acc - c,
+                              e_ref[...].astype(jnp.float32))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("group_size", "interpret"))
+def ef_sign_fused(g: jnp.ndarray, e: jnp.ndarray, gamma, mask_self,
+                  group_size: int, interpret: bool = True):
+    """Fused local COCO-EF step: one HBM pass over g/e producing the wire
+    payload (words, scales), the decompressed C(acc) and the new error.
+    g, e: (n,) f32; gamma, mask_self: scalars."""
+    n = g.shape[0]
+    ng = n // group_size
+    grid = (ng // G_BLK,)
+    gamma = jnp.asarray(gamma, jnp.float32).reshape(1)
+    mask_self = jnp.asarray(mask_self, jnp.float32).reshape(1)
+    words, scales, c, e_new = pl.pallas_call(
+        _ef_fused_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((G_BLK, group_size), lambda i: (i, 0)),
+            pl.BlockSpec((G_BLK, group_size), lambda i: (i, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=[
+            pl.BlockSpec((G_BLK, group_size // 32), lambda i: (i, 0)),
+            pl.BlockSpec((G_BLK, 1), lambda i: (i, 0)),
+            pl.BlockSpec((G_BLK, group_size), lambda i: (i, 0)),
+            pl.BlockSpec((G_BLK, group_size), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((ng, group_size // 32), jnp.uint32),
+            jax.ShapeDtypeStruct((ng, 1), jnp.float32),
+            jax.ShapeDtypeStruct((ng, group_size), jnp.float32),
+            jax.ShapeDtypeStruct((ng, group_size), jnp.float32),
+        ],
+        interpret=interpret,
+    )(g.reshape(ng, group_size), e.reshape(ng, group_size), gamma, mask_self)
+    return (words.reshape(-1), scales.reshape(-1), c.reshape(-1),
+            e_new.reshape(-1))
+
+
+def _decode_reduce_kernel(words_ref, scales_ref, mask_ref, out_ref,
+                          *, group_size: int, n_senders: int):
+    acc = jnp.zeros(out_ref.shape, jnp.float32)                    # (G, group)
+    for i in range(n_senders):                                     # static loop
+        w = words_ref[i]                                           # (G, g/32)
+        s = scales_ref[i]                                          # (G, 1)
+        bits = (w[..., None] >> jnp.arange(32, dtype=jnp.uint32)) & jnp.uint32(1)
+        signs = bits.astype(jnp.float32).reshape(out_ref.shape) * 2.0 - 1.0
+        acc = acc + mask_ref[i] * signs * s
+    out_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("group_size", "interpret"))
+def sign_decode_reduce(words: jnp.ndarray, scales: jnp.ndarray,
+                       mask: jnp.ndarray, group_size: int,
+                       interpret: bool = True) -> jnp.ndarray:
+    """Server-side decode + masked aggregate.
+    words: (N, n/32) u32; scales: (N, n/g) f32; mask: (N,) f32 -> (n,)."""
+    N = words.shape[0]
+    n = words.shape[1] * 32
+    ng = n // group_size
+    grid = (ng // G_BLK,)
+    out = pl.pallas_call(
+        functools.partial(_decode_reduce_kernel, group_size=group_size,
+                          n_senders=N),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((N, G_BLK, group_size // 32), lambda i: (0, i, 0)),
+            pl.BlockSpec((N, G_BLK, 1), lambda i: (0, i, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec((G_BLK, group_size), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((ng, group_size), jnp.float32),
+        interpret=interpret,
+    )(words.reshape(N, ng, group_size // 32),
+      scales.reshape(N, ng, 1), mask)
+    return out.reshape(-1)

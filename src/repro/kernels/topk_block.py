@@ -1,0 +1,55 @@
+"""Pallas TPU kernel: block-local top-k sparsification.
+
+TPU adaptation of top-K (DESIGN.md Sec. 2): instead of a global sort, keep
+the k largest-magnitude entries per contiguous block.  The kernel runs k
+rounds of (row-max |x| over unselected, mark argmax) — pure VPU work with
+no sort, k is small (8-32).  Tie-breaking matches ref.py (first occurrence
+wins via position penalty).
+
+  x block (R_BLK, block_size) f32 VMEM -> same-shape sparsified output.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+R_BLK = 8  # rows (blocks) per grid step
+
+
+def _topk_kernel(x_ref, o_ref, *, k: int):
+    x = x_ref[...].astype(jnp.float32)          # (R, B)
+    B = x.shape[-1]
+    mag = jnp.abs(x)
+    pos = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+    keep = jnp.zeros(x.shape, jnp.bool_)
+    avail = jnp.ones(x.shape, jnp.bool_)
+    for _ in range(k):                          # static unrolled rounds
+        m = jnp.where(avail, mag, -1.0)
+        row_max = jnp.max(m, axis=-1, keepdims=True)
+        # first position achieving the max
+        is_max = (m == row_max) & avail
+        first = jnp.min(jnp.where(is_max, pos, B), axis=-1, keepdims=True)
+        sel = pos == first
+        keep = keep | sel
+        avail = avail & ~sel
+    o_ref[...] = jnp.where(keep, x, 0.0).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_size", "interpret"))
+def block_topk(x: jnp.ndarray, k: int, block_size: int,
+               interpret: bool = True) -> jnp.ndarray:
+    """x: (n,) with n % (R_BLK * block_size) == 0 -> sparsified (n,)."""
+    n = x.shape[0]
+    rows = n // block_size
+    out = pl.pallas_call(
+        functools.partial(_topk_kernel, k=k),
+        grid=(rows // R_BLK,),
+        in_specs=[pl.BlockSpec((R_BLK, block_size), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((R_BLK, block_size), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, block_size), x.dtype),
+        interpret=interpret,
+    )(x.reshape(rows, block_size))
+    return out.reshape(-1)

@@ -1,0 +1,193 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware:
+  * jax.jit(step).lower(**ShapeDtypeStruct inputs) -> .compile() must
+    succeed on the (16,16) single-pod AND (2,16,16) multi-pod meshes,
+  * memory_analysis() proves the per-device working set,
+  * cost_analysis() + HLO collective parsing feed EXPERIMENTS.md §Roofline.
+
+Results are cached as JSON under results/dryrun/.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma2-2b --shape train_4k --mesh both
+  python -m repro.launch.dryrun --all [--mesh single|multi|both] [--force]
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import REGISTRY, STANDARD_SHAPES, get_arch
+from repro.launch import hlo_analysis, hlo_cost
+from repro.launch.mesh import make_production_mesh
+from repro.launch.serve import build_serve_setup
+from repro.launch.train import TrainRun, build_train_setup
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def _jsonable(x):
+    if isinstance(x, (np.integer,)):
+        return int(x)
+    if isinstance(x, (np.floating,)):
+        return float(x)
+    return x
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
+             mode: str = "cocoef", extra_run: dict | None = None) -> dict:
+    spec = get_arch(arch_id)
+    mesh_name = "multi" if multi_pod else "single"
+    rec = {"arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+           "mode": mode, "status": "unknown"}
+    if shape_name in spec.skip_shapes:
+        rec.update(status="skipped", reason=spec.skip_shapes[shape_name])
+        return rec
+    shape = spec.shapes[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ndev = int(np.prod(mesh.devices.shape))
+    t0 = time.time()
+    try:
+        if shape.is_train:
+            run = TrainRun(mode=mode, **(extra_run or {}))
+            setup = build_train_setup(spec, mesh, shape, run)
+            specs = setup.input_specs()
+            lowered = jax.jit(setup.train_step).lower(
+                specs["params"], specs["e"], specs["opt"], specs["batch"],
+                specs["step"], specs["key"])
+            rec["n_code"] = setup.n_code
+            rec["b_loc"] = setup.b_loc
+            rec["flat_pad"] = setup.flat_pad
+            rec["effective_mode"] = setup.cocoef_cfg.mode
+        else:
+            setup = build_serve_setup(spec, mesh, shape)
+            kind = "decode" if shape.kind == "decode" else "prefill"
+            specs = setup.input_specs(kind)
+            if kind == "decode":
+                lowered = jax.jit(
+                    setup.decode_step,
+                    out_shardings=setup.decode_out_shardings,
+                    donate_argnums=(1,)).lower(
+                    specs["params"], specs["caches"], specs["inputs"],
+                    specs["pos"])
+            else:
+                lowered = jax.jit(
+                    setup.prefill_step,
+                    out_shardings=setup.prefill_out_shardings).lower(
+                    specs["params"], specs["inputs"])
+            rec["cache_len"] = setup.cache_len
+        rec["lower_s"] = time.time() - t0
+
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = time.time() - t1
+
+        mem = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_estimate_bytes": (mem.argument_size_in_bytes
+                                    + mem.output_size_in_bytes
+                                    + mem.temp_size_in_bytes
+                                    - mem.alias_size_in_bytes),
+        }
+        ca = compiled.cost_analysis() or {}
+        rec["cost_xla_raw"] = {k: _jsonable(v) for k, v in ca.items()
+                               if k in ("flops", "bytes accessed",
+                                        "transcendentals")}
+        txt = compiled.as_text()
+        # while-aware cost model (XLA's cost_analysis counts loop bodies
+        # once — see repro.launch.hlo_cost)
+        cost = hlo_cost.analyze(txt, ndev)
+        rec["cost"] = {"flops": cost.flops, "bytes accessed": cost.bytes,
+                       "n_while": cost.n_while,
+                       "unknown_trip": cost.unknown_trip}
+        rec["collectives"] = {
+            "wire_bytes_per_device": cost.wire_bytes,
+            "by_op": cost.coll_by_op,
+        }
+        rec["roofline"] = hlo_analysis.roofline_terms(
+            cost.flops, cost.bytes, cost.wire_bytes)
+        rec["status"] = "ok"
+    except Exception as e:  # noqa: BLE001 — record, don't crash the sweep
+        rec["status"] = "fail"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    rec["total_s"] = time.time() - t0
+    return rec
+
+
+def cell_path(arch_id, shape_name, mesh_name, mode="cocoef",
+              tag="") -> Path:
+    sfx = f"_{tag}" if tag else ""
+    return RESULTS / f"{arch_id}__{shape_name}__{mesh_name}__{mode}{sfx}.json"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both",
+                    choices=("single", "multi", "both"))
+    ap.add_argument("--mode", default="cocoef",
+                    choices=("cocoef", "coco", "dense"))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--run-json", default=None,
+                    help='JSON overrides for TrainRun, e.g. '
+                         '\'{"ef_dtype": "bfloat16"}\'')
+    args = ap.parse_args()
+    extra_run = json.loads(args.run_json) if args.run_json else None
+
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    archs = list(REGISTRY) if (args.all or not args.arch) else [args.arch]
+    shapes = list(STANDARD_SHAPES) if (args.all or not args.shape) \
+        else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    n_ok = n_fail = n_skip = 0
+    for arch in archs:
+        for shp in shapes:
+            for mp in meshes:
+                mname = "multi" if mp else "single"
+                path = cell_path(arch, shp, mname, args.mode, args.tag)
+                if path.exists() and not args.force:
+                    rec = json.loads(path.read_text())
+                    print(f"[cached] {arch} {shp} {mname}: {rec['status']}")
+                    continue
+                rec = run_cell(arch, shp, mp, args.mode, extra_run)
+                path.write_text(json.dumps(rec, indent=1))
+                s = rec["status"]
+                n_ok += s == "ok"
+                n_fail += s == "fail"
+                n_skip += s == "skipped"
+                extra = ""
+                if s == "ok":
+                    r = rec["roofline"]
+                    extra = (f" dominant={r['dominant']}"
+                             f" comp={r['compute_s']*1e3:.2f}ms"
+                             f" mem={r['memory_s']*1e3:.2f}ms"
+                             f" coll={r['collective_s']*1e3:.2f}ms"
+                             f" peakMB={rec['memory']['peak_estimate_bytes']/2**20:.0f}")
+                elif s == "fail":
+                    extra = " " + rec["error"][:160]
+                print(f"[{s}] {arch} {shp} {mname}"
+                      f" ({rec.get('total_s', 0):.0f}s){extra}", flush=True)
+    print(f"done: ok={n_ok} fail={n_fail} skipped={n_skip}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,122 @@
+"""Parse compiled HLO for collective traffic + assemble roofline terms.
+
+collective_bytes is not in cost_analysis(), so we regex the optimized HLO:
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute (incl. async -start forms) contributes its result bytes,
+converted to per-device *wire* bytes with standard ring-algorithm factors:
+
+  all-gather       out * (g-1)/g          (receives everyone else's shard)
+  all-reduce       out * 2(g-1)/g         (reduce-scatter + all-gather ring)
+  reduce-scatter   out * (g-1)            (out is the scattered shard)
+  all-to-all       out * (g-1)/g
+  collective-permute  out                 (one hop)
+
+Hardware constants (TPU v5e target): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<rtype>\([^)]*\)|\S+?)\s+"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(")
+_ARRAY_RE = re.compile(r"(?P<dt>[a-z0-9]+)\[(?P<dims>[0-9,]*)\]")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _array_bytes(type_str: str) -> int:
+    total = 0
+    for m in _ARRAY_RE.finditer(type_str):
+        dt = m.group("dt")
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = m.group("dims")
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        first = m.group(1)
+        return len([x for x in first.split(",") if x.strip() != ""])
+    return default
+
+
+_WIRE_FACTOR = {
+    "all-gather": lambda g: (g - 1) / g,
+    "all-reduce": lambda g: 2 * (g - 1) / g,
+    "reduce-scatter": lambda g: float(g - 1),
+    "all-to-all": lambda g: (g - 1) / g,
+    "collective-permute": lambda g: 1.0,
+}
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    ops: List[Dict]                  # per-op records
+    wire_bytes: float                # per-device wire bytes (ring model)
+    result_bytes: float              # sum of result sizes (raw)
+
+    def by_op(self) -> Dict[str, float]:
+        out: Dict[str, float] = {}
+        for o in self.ops:
+            out[o["op"]] = out.get(o["op"], 0.0) + o["wire_bytes"]
+        return out
+
+
+def parse_collectives(hlo_text: str, num_devices: int) -> CollectiveStats:
+    ops = []
+    wire = 0.0
+    raw = 0.0
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        nbytes = _array_bytes(m.group("rtype"))
+        g = _group_size(line, num_devices)
+        w = nbytes * _WIRE_FACTOR[op](max(g, 1))
+        ops.append({"op": op, "result_bytes": nbytes, "group": g,
+                    "wire_bytes": w})
+        wire += w
+        raw += nbytes
+    return CollectiveStats(ops=ops, wire_bytes=wire, result_bytes=raw)
+
+
+def roofline_terms(flops_per_device: float, bytes_per_device: float,
+                   wire_bytes_per_device: float) -> Dict[str, float]:
+    compute_s = flops_per_device / PEAK_FLOPS
+    memory_s = bytes_per_device / HBM_BW
+    collective_s = wire_bytes_per_device / ICI_BW
+    dominant = max(("compute", compute_s), ("memory", memory_s),
+                   ("collective", collective_s), key=lambda kv: kv[1])[0]
+    total = max(compute_s, memory_s, collective_s)
+    return {
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": collective_s, "dominant": dominant,
+        "bound_s": total,
+        "roofline_fraction": (compute_s / total) if total > 0 else 0.0,
+    }

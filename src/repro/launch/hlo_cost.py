@@ -1,0 +1,311 @@
+"""While-aware HLO cost model (flops / HBM bytes / collective wire bytes).
+
+XLA's `compiled.cost_analysis()` counts each while-loop body ONCE, so any
+scan-over-layers model is undercounted by ~num_layers x (verified in
+tests/test_hlo_cost.py).  This module re-derives the three roofline inputs
+from `compiled.as_text()` with `known_trip_count` scaling:
+
+  flops   — 2 * prod(result dims) * prod(contracting dims) per dot op
+            (matmuls dominate; elementwise flops are ignored, consistent
+            with MXU rooflines)
+  bytes   — per executed op: result bytes + operand bytes (each optimized-
+            HLO op line is an execution unit on the target; tuples /
+            bitcasts / parameters / constants excluded)
+  wire    — collective result bytes with ring-algorithm factors
+            (see hlo_analysis._WIRE_FACTOR)
+
+While bodies and conditions are multiplied by their known_trip_count;
+fusion-called computations are charged through the fusion op itself
+(not double-counted); scalar `to_apply` reducers are ignored.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+from .hlo_analysis import _DTYPE_BYTES, _WIRE_FACTOR, _group_size
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*{")
+_OP_LINE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(?P<rtype>\([^)]*\)|[^\s]+)\s+"
+    r"(?P<kind>[\w\-]+)\(")
+_ARRAY = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_TRIP = re.compile(r'known_trip_count[": {]+n[": ]+(\d+)')
+_CALLS = re.compile(r"(?:calls|body)=%?([\w\.\-]+)")
+_COND = re.compile(r"condition=%?([\w\.\-]+)")
+_OPERANDS = re.compile(r"%([\w\.\-]+)")
+_PARAM = re.compile(r"%?([\w\.\-]+):\s*(\([^)]*\)|[^\s,)]+)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+_SKIP_KINDS = {"tuple", "get-tuple-element", "parameter", "constant",
+               "bitcast", "after-all", "partition-id", "replica-id"}
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _arrays(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for m in _ARRAY.finditer(type_str):
+        if m.group(1) not in _DTYPE_BYTES:
+            continue
+        dims = [int(d) for d in m.group(2).split(",") if d]
+        out.append((m.group(1), dims))
+    return out
+
+
+def _nbytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _arrays(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class OpRec:
+    kind: str
+    rtype: str
+    line: str
+    operands: List[str]
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[OpRec]
+    symbols: Dict[str, str]          # %name -> type string
+
+
+def parse_computations(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in hlo.splitlines():
+        line = raw.strip()
+        if cur is None:
+            m = _COMP_HDR.match(line)
+            if m:
+                cur = Computation(m.group(1), [], {})
+                # parameters into the symbol table
+                hdr_args = line[line.find("(") + 1:line.rfind(") ->")]
+                for pm in _PARAM.finditer(hdr_args):
+                    cur.symbols[pm.group(1)] = pm.group(2)
+            continue
+        if line.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_LINE.match(line)
+        if not m:
+            continue
+        name, rtype, kind = m.group(1), m.group("rtype"), m.group("kind")
+        cur.symbols[name] = rtype
+        paren = line.find(f"{kind}(") + len(kind) + 1
+        depth = 1
+        j = paren
+        while j < len(line) and depth > 0:
+            if line[j] == "(":
+                depth += 1
+            elif line[j] == ")":
+                depth -= 1
+            j += 1
+        operands = _OPERANDS.findall(line[paren:j - 1])
+        cur.ops.append(OpRec(kind=kind, rtype=rtype, line=line,
+                             operands=operands))
+    return comps
+
+
+def _dot_flops(op: OpRec, comp: Computation) -> float:
+    res = _arrays(op.rtype)
+    if not res:
+        return 0.0
+    rn = 1
+    for d in res[0][1]:
+        rn *= d
+    cm = _CONTRACT.search(op.line)
+    contract = 1
+    if cm and op.operands:
+        lhs_t = comp.symbols.get(op.operands[0], "")
+        lhs = _arrays(lhs_t)
+        if lhs:
+            dims = lhs[0][1]
+            for idx in (int(x) for x in cm.group(1).split(",") if x):
+                if idx < len(dims):
+                    contract *= dims[idx]
+    return 2.0 * rn * contract
+
+
+def _op_bytes_fusion(op: OpRec, comp: Computation,
+                     comps: Dict[str, Computation]) -> float:
+    """Bytes for a fusion op: result + operands, except
+      * parameters whose only internal use is dynamic-slice are charged at
+        the slice size (a loop body reads one step of a stacked array),
+      * a parameter that is only the in-place target of the root
+        dynamic-update-slice is not re-read,
+      * a dynamic-update-slice root writes its update, not the buffer."""
+    m = _CALLS.search(op.line)
+    inner = comps.get(m.group(1)) if m else None
+    if inner is None:
+        b = _nbytes(op.rtype)
+        for o in op.operands:
+            t = comp.symbols.get(o)
+            if t:
+                b += _nbytes(t)
+        return b
+
+    header_params = [n for n in inner.symbols if n.startswith("param_")]
+    uses: Dict[str, list] = {pn: [] for pn in header_params}
+    for iop in inner.ops:
+        for o in iop.operands:
+            if o in uses:
+                uses[o].append(iop)
+
+    root = inner.ops[-1] if inner.ops else None
+    res = _nbytes(op.rtype)
+    if root is not None and root.kind == "dynamic-update-slice" \
+            and len(root.operands) > 1:
+        res = 2.0 * _nbytes(inner.symbols.get(root.operands[1], ""))
+
+    b = res
+    for i, o in enumerate(op.operands):
+        t = comp.symbols.get(o)
+        if t is None or i >= len(header_params):
+            if t:
+                b += _nbytes(t)
+            continue
+        pn = header_params[i]
+        consumers = uses.get(pn, [])
+        kinds = {c.kind for c in consumers}
+        if consumers and kinds == {"dynamic-slice"}:
+            b += sum(_nbytes(c.rtype) for c in consumers)
+        elif (root is not None and root.kind == "dynamic-update-slice"
+              and consumers == [root] and root.operands
+              and root.operands[0] == pn):
+            pass  # in-place DUS target: not re-read
+        else:
+            b += _nbytes(t)
+    return b
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    wire_bytes: float = 0.0
+    coll_by_op: Dict[str, float] = dataclasses.field(default_factory=dict)
+    n_while: int = 0
+    unknown_trip: int = 0
+
+    def __iadd__(self, o: "Cost"):
+        self.flops += o.flops
+        self.bytes += o.bytes
+        self.wire_bytes += o.wire_bytes
+        for k, v in o.coll_by_op.items():
+            self.coll_by_op[k] = self.coll_by_op.get(k, 0.0) + v
+        self.n_while += o.n_while
+        self.unknown_trip += o.unknown_trip
+        return self
+
+    def scaled(self, f: float) -> "Cost":
+        return Cost(self.flops * f, self.bytes * f, self.wire_bytes * f,
+                    {k: v * f for k, v in self.coll_by_op.items()},
+                    self.n_while, self.unknown_trip)
+
+
+def _cost_of(comp_name: str, comps: Dict[str, Computation],
+             ndev: int, memo: Dict[str, Cost]) -> Cost:
+    if comp_name in memo:
+        return memo[comp_name]
+    memo[comp_name] = Cost()            # cycle guard
+    comp = comps.get(comp_name)
+    if comp is None:
+        return memo[comp_name]
+    total = Cost()
+    for op in comp.ops:
+        k = op.kind
+        if k in _SKIP_KINDS:
+            continue
+        if k == "while":
+            trip = 1
+            m = _TRIP.search(op.line)
+            unknown = 0
+            if m:
+                trip = int(m.group(1))
+            else:
+                unknown = 1
+            sub = Cost()
+            bm = _CALLS.search(op.line)
+            if bm:
+                sub += _cost_of(bm.group(1), comps, ndev, memo)
+            cm = _COND.search(op.line)
+            if cm:
+                sub += _cost_of(cm.group(1), comps, ndev, memo)
+            sub = sub.scaled(trip)
+            sub.n_while += 1
+            sub.unknown_trip += unknown
+            total += sub
+            continue
+        if k in ("call", "conditional"):
+            bm = _CALLS.search(op.line)
+            if bm:
+                total += _cost_of(bm.group(1), comps, ndev, memo)
+            continue
+        # leaf op: bytes (result + operands).  Slicing ops are charged at
+        # slice granularity — a loop body that dynamic-slices one step out
+        # of a stacked array reads the SLICE, not the whole array, and a
+        # dynamic-update-slice writes in place (tests/test_hlo_cost.py).
+        flops = 0.0
+        if k == "dynamic-slice":
+            b = 2.0 * _nbytes(op.rtype)
+        elif k == "dynamic-update-slice":
+            upd = (comp.symbols.get(op.operands[1], "")
+                   if len(op.operands) > 1 else "")
+            b = 2.0 * _nbytes(upd)
+        elif k == "fusion":
+            b = _op_bytes_fusion(op, comp, comps)
+            bm = _CALLS.search(op.line)
+            if bm:
+                inner = comps.get(bm.group(1))
+                if inner:
+                    for iop in inner.ops:
+                        if iop.kind == "dot":
+                            flops += _dot_flops(iop, inner)
+        else:
+            b = _nbytes(op.rtype)
+            for o in op.operands:
+                t = comp.symbols.get(o)
+                if t:
+                    b += _nbytes(t)
+        if k == "dot":
+            flops = _dot_flops(op, comp)
+        base = k.split("-start")[0]
+        wire = 0.0
+        coll = {}
+        if base in _COLLECTIVES:
+            g = _group_size(op.line, ndev)
+            wire = _nbytes(op.rtype) * _WIRE_FACTOR[base](max(g, 1))
+            coll = {base: wire}
+        c = Cost(flops=flops, bytes=b, wire_bytes=wire, coll_by_op=coll)
+        total += c
+    memo[comp_name] = total
+    return total
+
+
+def analyze(hlo_text: str, ndev: int) -> Cost:
+    comps = parse_computations(hlo_text)
+    # exclude computations only reachable via fusion `calls=` from the
+    # entry walk — _cost_of only recurses through while/call/conditional,
+    # so that's automatic.  Find the entry computation:
+    entry = None
+    for raw in hlo_text.splitlines():
+        if raw.startswith("ENTRY"):
+            m = _COMP_HDR.match(raw.strip())
+            if m:
+                entry = m.group(1)
+                break
+    if entry is None:
+        # fall back to the last computation
+        entry = list(comps)[-1] if comps else ""
+    return _cost_of(entry, comps, ndev, {})

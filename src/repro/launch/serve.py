@@ -1,0 +1,144 @@
+"""Serving (prefill / decode) steps on the production mesh.
+
+No gradient traffic here — the paper's technique is train-side — so these
+cells exercise the TP/DP serving shardings: batch over the dp axes, KV/state
+caches sharded per repro.sharding.rules.cache_specs (batch over dp, trailing
+feature dim over model).
+
+gemma2 @ long_500k: every layer's ring cache is capped at the sliding
+window (the global-attention half is a documented deviation, DESIGN.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.common import ArchSpec, ShapeCfg
+from repro.nn import Model
+from repro.sharding import ctx, rules
+
+__all__ = ["ServeSetup", "build_serve_setup"]
+
+LONG_SEQ = 1 << 19
+
+
+@dataclasses.dataclass
+class ServeSetup:
+    mesh: Mesh
+    model: Model
+    cache_len: int
+    batch: int
+    seq_len: int
+    param_shardings: Any
+    cache_shardings: Any
+    batch_sharding: Any
+    decode_step: Any
+    prefill_step: Any
+    decode_out_shardings: Any
+    prefill_out_shardings: Any
+    input_specs: Any          # (kind) -> kwargs of ShapeDtypeStruct
+
+
+def _dp_spec(mesh: Mesh, batch: int) -> Optional[Any]:
+    """Largest dp-axes prefix that divides the batch."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    axes = [a for a in ("pod", "data") if a in sizes]
+    total = int(np.prod([sizes[a] for a in axes])) if axes else 1
+    while axes and batch % total != 0:
+        axes.pop(0)
+        total = int(np.prod([sizes[a] for a in axes]))
+    if not axes:
+        return None
+    return tuple(axes) if len(axes) > 1 else axes[0]
+
+
+def build_serve_setup(spec: ArchSpec, mesh: Mesh, shape: ShapeCfg,
+                      smoke: bool = False) -> ServeSetup:
+    cfg = spec.smoke if smoke else spec.config
+    model = Model(cfg)
+    B, S = shape.global_batch, shape.seq_len
+
+    cache_len = S
+    if (cfg.family in ("dense", "moe") and cfg.sliding_window
+            and S >= LONG_SEQ):
+        cache_len = cfg.sliding_window      # window-capped rings (gemma2)
+
+    pshapes = model.param_shapes()
+    pspecs = rules.param_specs(pshapes, cfg, mesh, fsdp=spec.coding.fsdp)
+    pshard = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs)
+
+    cshapes = jax.eval_shape(lambda: model.init_caches(B, cache_len))
+    bspec = _dp_spec(mesh, B)
+    batch_axes = (bspec if isinstance(bspec, tuple) else
+                  ((bspec,) if bspec else ()))
+    cspecs = rules.cache_specs(cshapes, cfg, mesh, batch_axes, B)
+    cshard = jax.tree.map(lambda s: NamedSharding(mesh, s), cspecs)
+
+    def decode_step(params, caches, inputs, pos):
+        with ctx.use_mesh(mesh):
+            logits, new_caches = model.decode_step(params, caches, inputs, pos)
+        return logits, new_caches
+
+    def prefill_step(params, inputs):
+        with ctx.use_mesh(mesh):
+            return model.prefill(params, inputs)
+
+    # ---- output shardings (pin, or GSPMD may replicate the big caches) ----
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    vshard = NamedSharding(
+        mesh, P(bspec, "model" if cfg.vocab_size % sizes.get("model", 1) == 0
+                else None))
+    decode_out_shardings = (vshard, cshard)
+
+    if cfg.input_mode == "tokens":
+        inp_s = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    else:
+        inp_s = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)
+    pre_cshapes = jax.eval_shape(lambda p, i: prefill_step(p, i)[1],
+                                 pshapes, inp_s)
+    pre_cspecs = rules.cache_specs(pre_cshapes, cfg, mesh, batch_axes, B)
+    pre_cshard = jax.tree.map(lambda s: NamedSharding(mesh, s), pre_cspecs)
+    prefill_out_shardings = (vshard, pre_cshard)
+
+    def input_specs(kind: str):
+        pd = jax.tree.map(
+            lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+            pshapes, pshard)
+        if kind == "decode":
+            cd = jax.tree.map(
+                lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+                cshapes, cshard)
+            if cfg.input_mode == "tokens":
+                tok = jax.ShapeDtypeStruct(
+                    (B, 1), jnp.int32,
+                    sharding=NamedSharding(mesh, P(bspec, None)))
+            else:
+                tok = jax.ShapeDtypeStruct(
+                    (B, 1, cfg.d_model), jnp.bfloat16,
+                    sharding=NamedSharding(mesh, P(bspec, None, None)))
+            return {"params": pd, "caches": cd, "inputs": tok,
+                    "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+        # prefill
+        if cfg.input_mode == "tokens":
+            inp = jax.ShapeDtypeStruct(
+                (B, S), jnp.int32,
+                sharding=NamedSharding(mesh, P(bspec, None)))
+        else:
+            inp = jax.ShapeDtypeStruct(
+                (B, S, cfg.d_model), jnp.bfloat16,
+                sharding=NamedSharding(mesh, P(bspec, None, None)))
+        return {"params": pd, "inputs": inp}
+
+    return ServeSetup(mesh=mesh, model=model, cache_len=cache_len, batch=B,
+                      seq_len=S, param_shardings=pshard,
+                      cache_shardings=cshard,
+                      batch_sharding=bspec, decode_step=decode_step,
+                      prefill_step=prefill_step,
+                      decode_out_shardings=decode_out_shardings,
+                      prefill_out_shardings=prefill_out_shardings,
+                      input_specs=input_specs)

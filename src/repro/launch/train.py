@@ -1,0 +1,342 @@
+"""Distributed COCO-EF training step on the production mesh.
+
+Two-stage structure (DESIGN.md Sec. 2/5):
+
+  Stage 1 — per-coding-rank coded gradients, plain GSPMD:
+    the global batch carries a leading coding dimension (N_code, B_loc, ...)
+    sharded over the coding axes; `vmap(grad)` over that dimension yields
+    each rank's coded gradient  g_i = sum_{k in S_i} grad f_k / (d_k (1-p))
+    (the per-example weights fold the coding weights, so the coded sum is a
+    single weighted backward pass).  TP/FSDP sharding inside is handled by
+    GSPMD via the rules in repro.sharding.rules + activation constraints.
+
+  Stage 2 — Algorithm 1 aggregation, fully-manual shard_map:
+    every device flattens its local gradient slice, applies
+    error-feedback + biased sign compression, and participates in the
+    two-phase wire-compressed collective (repro.core.collectives).  The
+    server update theta <- theta - ghat runs redundantly (replicated) on
+    every coding rank — bitwise identical to the paper's server.
+
+`mode`: cocoef (paper) | coco (no EF ablation) | dense (SGC [31] baseline).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.common import ArchSpec, ShapeCfg
+from repro.core import coding
+from repro.core.cocoef import (CocoEFConfig, FlatMeta, cocoef_update,
+                               flatten_local, padded_size, unflatten_local)
+from repro.nn import Model
+from repro.optim import OptimizerConfig, apply_update, init_opt_state, \
+    lr_schedule
+from repro.sharding import ctx, rules
+
+__all__ = ["TrainRun", "build_train_setup"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainRun:
+    mode: str = "cocoef"             # cocoef | coco | dense
+    base_lr: float = 1e-3
+    schedule: str = "constant"
+    warmup: int = 0
+    optimizer: OptimizerConfig = OptimizerConfig()
+    ef_dtype: str = "float32"
+    phase2_dtype: str = "float32"
+    phase2_sign: bool = False
+    num_buckets: int = 1
+    seed: int = 0
+    aux_weight: float = 0.01
+    param_dtype: Optional[str] = None   # override cfg (e.g. "bfloat16")
+
+
+@dataclasses.dataclass
+class TrainSetup:
+    """Everything needed to lower/run the step: shardings + callables."""
+    mesh: Mesh
+    model: Model
+    coding_axes: Tuple[str, ...]
+    n_code: int
+    b_loc: int
+    seq_len: int
+    flat_pad: int
+    param_specs: Any
+    param_shardings: Any
+    grads_shardings: Any
+    state_sharding: NamedSharding
+    batch_shardings: Any
+    train_step: Any                  # jit-able fn
+    input_specs: Any                 # () -> kwargs of ShapeDtypeStruct
+    init_state: Any                  # (key) -> (params, e, opt) real arrays
+    allocation: coding.Allocation
+    cocoef_cfg: CocoEFConfig
+
+
+def _local_flat_size(shapes_tree, specs_tree, mesh: Mesh) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    total = 0
+    for leaf, spec in zip(jax.tree.leaves(shapes_tree),
+                          jax.tree.leaves(specs_tree, is_leaf=lambda s: isinstance(s, P))):
+        n = 1
+        for dim, entry in zip(leaf.shape, tuple(spec) + (None,) * leaf.ndim):
+            if entry is None:
+                n *= dim
+            else:
+                axes = (entry,) if isinstance(entry, str) else entry
+                f = int(np.prod([sizes[a] for a in axes]))
+                n *= dim // f
+        total += n
+    return total
+
+
+def build_train_setup(spec: ArchSpec, mesh: Mesh, shape: ShapeCfg,
+                      run: TrainRun = TrainRun(), smoke: bool = False,
+                      mode: Optional[str] = None) -> TrainSetup:
+    cfg = spec.smoke if smoke else spec.config
+    if run.param_dtype:
+        cfg = dataclasses.replace(cfg, param_dtype=run.param_dtype)
+    mode = mode or run.mode
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    coding_axes = tuple(a for a in spec.coding.coding_axes
+                        if a in mesh.axis_names)
+    n_code = int(np.prod([axis_sizes[a] for a in coding_axes])) \
+        if coding_axes else 1
+    if n_code <= 1:
+        mode = "dense"               # coding degenerates (documented)
+        p_strag = 0.0
+    else:
+        p_strag = spec.coding.straggler_p
+
+    # ---- gradient coding allocation (static, host-side) -------------------
+    M = n_code                        # one subset per coding rank by default
+    d = min(spec.coding.redundancy, max(n_code, 1))
+    alloc = (coding.cyclic_allocation(n_code, M, d) if n_code > 1 else
+             coding.Allocation(S=np.ones((1, 1), np.int8)))
+    W = np.asarray(coding.encode_weights(alloc, p_strag))  # (N, M)
+
+    gb, seq = shape.global_batch, shape.seq_len
+    per_subset = max(1, gb // M)
+    b_loc = per_subset * d            # redundancy multiplies per-rank batch
+
+    model = Model(cfg)
+    pshapes = model.param_shapes()
+    fsdp = spec.coding.fsdp
+    pspecs = rules.param_specs(pshapes, cfg, mesh, fsdp=fsdp)
+    pshard = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs)
+    gspecs = rules.grads_specs(pshapes, cfg, mesh, coding_axes, fsdp=fsdp)
+    gshard = jax.tree.map(lambda s: NamedSharding(mesh, s), gspecs)
+
+    # device-local flat size (uniform across devices by construction)
+    group = spec.coding.group_size
+    nd_chunk = axis_sizes[coding_axes[-1]] if coding_axes else 1
+    loc = _local_flat_size(pshapes, pspecs, mesh)
+    flat_pad = padded_size(loc, nd_chunk, group, run.num_buckets)
+
+    mesh_shape = tuple(mesh.devices.shape)
+    state_shape = mesh_shape + (flat_pad,)
+    state_spec = P(*mesh.axis_names, None)
+    state_sharding = NamedSharding(mesh, state_spec)
+
+    cocoef_cfg = CocoEFConfig(
+        coding_axes=coding_axes if coding_axes else ("data",),
+        group_size=group, straggler_p=p_strag, mode=mode,
+        ef_dtype=run.ef_dtype, phase2_dtype=run.phase2_dtype,
+        phase2_sign=run.phase2_sign, num_buckets=run.num_buckets)
+
+    gamma_fn = lr_schedule(run.schedule, run.base_lr, run.warmup)
+    n_opt = len(init_opt_state(run.optimizer, 1))
+
+    # ---- batch specs -------------------------------------------------------
+    inner_axes = tuple(a for a in ("pod", "data")
+                       if a in mesh.axis_names and a not in coding_axes)
+    lead = (coding_axes if len(coding_axes) > 1 else
+            (coding_axes[0] if coding_axes else None))
+    inner = (inner_axes if len(inner_axes) > 1 else
+             (inner_axes[0] if inner_axes else None))
+    if cfg.input_mode == "tokens":
+        batch_specs = {"inputs": P(lead, inner, None),
+                       "weights": P(lead, inner)}
+        batch_shapes = {"inputs": jax.ShapeDtypeStruct(
+            (n_code, b_loc, seq + 1), jnp.int32),
+            "weights": jax.ShapeDtypeStruct((n_code, b_loc), jnp.float32)}
+    else:
+        batch_specs = {"inputs": P(lead, inner, None, None),
+                       "targets": P(lead, inner, None),
+                       "weights": P(lead, inner)}
+        batch_shapes = {
+            "inputs": jax.ShapeDtypeStruct((n_code, b_loc, seq, cfg.d_model),
+                                           jnp.bfloat16),
+            "targets": jax.ShapeDtypeStruct((n_code, b_loc, seq), jnp.int32),
+            "weights": jax.ShapeDtypeStruct((n_code, b_loc), jnp.float32)}
+    batch_shardings = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                                   batch_specs)
+
+    # =======================================================================
+    # stage 2 body (fully manual)
+    # =======================================================================
+    all_axes = set(mesh.axis_names)
+    n_leaves = len(jax.tree.leaves(pshapes))
+
+    def agg_body(params, grads, e, opt, step, key):
+        # local leaf blocks; grads leaves carry leading coding dims of size 1
+        p_leaves = jax.tree.leaves(params)
+        g_leaves = jax.tree.leaves(grads)
+        p_flat, p_meta = flatten_local(p_leaves, nd_chunk, group,
+                                       run.num_buckets)
+        g_flat, _ = flatten_local(g_leaves, nd_chunk, group, run.num_buckets)
+        e_loc = e.reshape(-1)
+        opt_loc = tuple(o.reshape(-1) for o in opt)
+
+        gamma = gamma_fn(step)
+        mask = coding.straggler_mask(key, step, max(n_code, 1), p_strag) \
+            if p_strag > 0 else jnp.ones((max(n_code, 1),), jnp.float32)
+
+        ghat, e_new = cocoef_update(g_flat, e_loc, mask, gamma, cocoef_cfg)
+        p_new_flat, opt_new = apply_update(run.optimizer, p_flat, ghat,
+                                           opt_loc, step, gamma)
+        new_leaves = unflatten_local(p_new_flat, p_meta)
+        params_new = jax.tree.unflatten(jax.tree.structure(params), new_leaves)
+        gnorm = jnp.sqrt(jnp.sum(ghat * ghat))          # local-slice norm
+        shape1 = (1,) * len(mesh_shape)
+        return (params_new, e_new.reshape(shape1 + (flat_pad,)),
+                tuple(o.reshape(shape1 + (flat_pad,)) for o in opt_new),
+                gnorm.reshape(shape1))
+
+    grads_in_specs = gspecs
+    params_in_specs = pspecs
+    opt_specs = tuple(state_spec for _ in range(n_opt))
+
+    agg = jax.shard_map(
+        agg_body, mesh=mesh,
+        in_specs=(params_in_specs, grads_in_specs, state_spec, opt_specs,
+                  P(), P()),
+        out_specs=(params_in_specs, state_spec, opt_specs,
+                   P(*mesh.axis_names)),
+        axis_names=all_axes, check_vma=False)
+
+    # =======================================================================
+    # full train step
+    # =======================================================================
+    # FSDP archs: register ZeRO-3-style just-in-time weight gathering —
+    # inside each layer scan the fsdp-sharded f32 weight slice is cast to
+    # bf16 and re-constrained to its TP-only sharding, so the data-axis
+    # all-gather moves bf16 weights instead of f32 activation partials
+    # (EXPERIMENTS.md §Perf).
+    weight_gather = None
+    if fsdp:
+        sizes_wg = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+        def weight_gather(tree, ct):
+            from jax.sharding import PartitionSpec as _P
+
+            def f(path, leaf):
+                if leaf.ndim < 2:
+                    return leaf
+                spec = rules._check_divisible(
+                    rules._leaf_rule(path, leaf, cfg, False), leaf.shape,
+                    sizes_wg)
+                # barrier: stop XLA hoisting the bf16 cast past the gather.
+                # (Forcing reduce-scatter on the cotangent via custom_vjp
+                # was tried and REFUTED: under remat the extra constraint
+                # duplicates the per-layer grad all-reduce — §Perf.)
+                w16 = jax.lax.optimization_barrier(leaf.astype(ct))
+                return jax.lax.with_sharding_constraint(
+                    w16, NamedSharding(mesh, _P(*spec)))
+            return jax.tree_util.tree_map_with_path(f, tree)
+
+    def train_step(params, e, opt, batch, step, key):
+        def loss_one(p, b):
+            loss, per_ex = model.loss(p, b)
+            return loss
+
+        def grad_one(b):
+            l, g = jax.value_and_grad(lambda p: loss_one(p, b))(params)
+            return g, l
+
+        with ctx.use_mesh(mesh, weight_gather=weight_gather):
+            grads, losses = jax.vmap(grad_one)(batch)
+        grads = jax.tree.map(
+            lambda x, s: jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, s)), grads, gspecs)
+        params_new, e_new, opt_new, gnorm = agg(params, grads, e, opt, step,
+                                                key)
+        metrics = {"loss": losses.mean(), "gnorm_local": gnorm.max()}
+        return params_new, e_new, opt_new, metrics
+
+    # ---- specs / init ------------------------------------------------------
+    def input_specs():
+        return {
+            "params": jax.tree.map(
+                lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+                pshapes, pshard),
+            "e": jax.ShapeDtypeStruct(state_shape, jnp.dtype(run.ef_dtype),
+                                      sharding=state_sharding),
+            "opt": tuple(jax.ShapeDtypeStruct(state_shape, jnp.float32,
+                                              sharding=state_sharding)
+                         for _ in range(n_opt)),
+            "batch": jax.tree.map(
+                lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+                batch_shapes, batch_shardings),
+            "step": jax.ShapeDtypeStruct((), jnp.int32),
+            "key": jax.ShapeDtypeStruct((2,), jnp.uint32),
+        }
+
+    def init_state(key):
+        params = jax.jit(model.init, out_shardings=pshard)(key)
+        e = jnp.zeros(state_shape, jnp.dtype(run.ef_dtype))
+        e = jax.device_put(e, state_sharding)
+        opt = tuple(jax.device_put(jnp.zeros(state_shape, jnp.float32),
+                                   state_sharding) for _ in range(n_opt))
+        return params, e, opt
+
+    return TrainSetup(
+        mesh=mesh, model=model, coding_axes=coding_axes, n_code=n_code,
+        b_loc=b_loc, seq_len=seq, flat_pad=flat_pad, param_specs=pspecs,
+        param_shardings=pshard, grads_shardings=gshard,
+        state_sharding=state_sharding, batch_shardings=batch_shardings,
+        train_step=train_step, input_specs=input_specs, init_state=init_state,
+        allocation=alloc, cocoef_cfg=cocoef_cfg)
+
+
+def make_batch_for_step(setup: TrainSetup, spec: ArchSpec, shape: ShapeCfg,
+                        key, step: int, smoke: bool = False):
+    """Materialize a real global batch (smoke/integration runs)."""
+    cfg = spec.smoke if smoke else spec.config
+    n_code, b_loc, seq = setup.n_code, setup.b_loc, setup.seq_len
+    W = np.asarray(coding.encode_weights(
+        setup.allocation, setup.cocoef_cfg.straggler_p))
+    per_subset = max(1, shape.global_batch // setup.allocation.num_subsets)
+
+    toks = []
+    weights = []
+    for i in range(n_code):
+        sids = setup.allocation.subsets_of(i)
+        rows = []
+        wrow = []
+        for sid in sids:
+            sk = jax.random.fold_in(jax.random.fold_in(key, int(sid)),
+                                    np.uint32(step))
+            rows.append(jax.random.randint(sk, (per_subset, seq + 1), 0,
+                                           cfg.vocab_size, dtype=jnp.int32))
+            wrow.append(jnp.full((per_subset,),
+                                 W[i, sid] / per_subset, jnp.float32))
+        toks.append(jnp.concatenate(rows, 0))
+        weights.append(jnp.concatenate(wrow, 0))
+    inputs = jnp.stack(toks)
+    wts = jnp.stack(weights)
+    if cfg.input_mode == "tokens":
+        return {"inputs": inputs, "weights": wts}
+    emb = jax.random.normal(key, (n_code, b_loc, seq, cfg.d_model),
+                            jnp.bfloat16) * 0.02
+    tgt = inputs[..., :-1]
+    return {"inputs": emb, "targets": tgt, "weights": wts}

@@ -1,0 +1,3 @@
+from . import config, layers, models, moe, ssm, transformer, xlstm  # noqa: F401
+from .config import ModelConfig  # noqa: F401
+from .models import Model  # noqa: F401

@@ -1,0 +1,94 @@
+"""Mixture-of-Experts layer (GShard-style dense dispatch, EP-shardable).
+
+Top-k routing with capacity: tokens are dispatched to experts via one-hot
+einsums so every shape is static and the expert dimension can be sharded
+over the `model` mesh axis (expert parallelism).  Supports shared experts
+(deepseek-v2) that every token passes through.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import dense_init
+
+
+def init_moe(key, cfg: ModelConfig):
+    pd = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 5)
+    d, ff, E = cfg.d_model, cfg.moe_ff, cfg.moe_experts
+    p = {
+        "router": dense_init(ks[0], (d, E), d, pd),
+        "w_gate": dense_init(ks[1], (E, d, ff), d, pd),
+        "w_up": dense_init(ks[2], (E, d, ff), d, pd),
+        "w_down": dense_init(ks[3], (E, ff, d), ff, pd),
+    }
+    if cfg.moe_shared > 0:
+        sff = ff * cfg.moe_shared
+        kk = jax.random.split(ks[4], 3)
+        p["shared"] = {"w_gate": dense_init(kk[0], (d, sff), d, pd),
+                       "w_up": dense_init(kk[1], (d, sff), d, pd),
+                       "w_down": dense_init(kk[2], (sff, d), sff, pd)}
+    return p
+
+
+def capacity(tokens: int, cfg: ModelConfig) -> int:
+    c = math.ceil(tokens * cfg.moe_top_k / cfg.moe_experts * cfg.capacity_factor)
+    return max(8, int(math.ceil(c / 8) * 8))  # lane-align
+
+
+def apply_moe(p, x, cfg: ModelConfig):
+    """x: (B, S, d) -> (B, S, d), plus aux load-balance loss.
+
+    Sort-based dispatch (static shapes): the classic GShard one-hot
+    einsums cost T*E*C*d flops — measured 36x the useful expert compute at
+    T=131k (EXPERIMENTS.md §Perf M1).  Here token slots are assigned by a
+    stable sort over expert ids and moved with gather/scatter; only the
+    E*C*d expert matmuls remain.
+    """
+    ct = x.dtype
+    B, S, d = x.shape
+    T = B * S
+    E, k = cfg.moe_experts, cfg.moe_top_k
+    xt = x.reshape(T, d)
+
+    logits = (xt.astype(jnp.float32) @ p["router"].astype(jnp.float32))  # (T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)                        # (T,k)
+    gate_vals = gate_vals / (gate_vals.sum(-1, keepdims=True) + 1e-9)
+
+    C = capacity(T, cfg)
+    eflat = gate_idx.reshape(-1)                                         # (T*k,)
+    order = jnp.argsort(eflat, stable=True)
+    sorted_e = eflat[order]
+    starts = jnp.searchsorted(sorted_e, jnp.arange(E), side="left")
+    pos = jnp.arange(T * k) - starts[sorted_e]                           # rank
+    keep = pos < C
+    slot = jnp.where(keep, sorted_e * C + pos, E * C)                    # drop
+    token_of = order // k
+
+    xe = jnp.zeros((E * C, d), ct).at[slot].set(
+        xt[token_of], mode="drop").reshape(E, C, d)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p["w_gate"].astype(ct)))
+    h = h * jnp.einsum("ecd,edf->ecf", xe, p["w_up"].astype(ct))
+    ye = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(ct))           # (E,C,d)
+
+    y_slots = ye.reshape(E * C, d)[jnp.minimum(slot, E * C - 1)]
+    gv = (gate_vals.reshape(-1)[order] * keep).astype(ct)
+    out = jnp.zeros((T, d), ct).at[token_of].add(y_slots * gv[:, None])
+
+    if cfg.moe_shared > 0:
+        sp = p["shared"]
+        hs = jax.nn.silu(xt @ sp["w_gate"].astype(ct)) * (xt @ sp["w_up"].astype(ct))
+        out = out + hs @ sp["w_down"].astype(ct)
+
+    # load-balance aux loss (Switch-style)
+    me = probs.mean(0)                                                   # (E,)
+    counts = jnp.bincount(jnp.where(keep, sorted_e, E), length=E + 1)[:E]
+    ce = counts.astype(jnp.float32) / max(T, 1)
+    aux = E * jnp.sum(me * ce)
+    return out.reshape(B, S, d), aux

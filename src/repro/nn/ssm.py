@@ -1,0 +1,171 @@
+"""Mamba2 (SSD) block — used by zamba2 and available standalone.
+
+Implements the scalar-A-per-head state space duality form:
+  h_t = exp(dt_t * A) h_{t-1} + dt_t * (B_t ⊗ x_t)
+  y_t = C_t · h_t + D * x_t
+with a causal depthwise conv front-end and gated output, matching the
+Mamba2 architecture.  The sequence recurrence uses a chunked parallel scan
+(jax.lax.associative_scan over chunk states) — TPU-friendly: the inner
+chunk work is batched matmuls, the cross-chunk recurrence is logarithmic.
+
+Projections are stored as separate leaves (w_z / w_x / w_B / w_C / w_dt and
+conv_x / conv_bc) so tensor parallelism can shard the d_inner channels
+while keeping the small B/C/dt heads replicated (repro.sharding.rules).
+
+Decode path: O(1) recurrent state update per token (the reason the hybrid
+archs run the 500k-context cell).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import dense_init
+
+
+def init_mamba2(key, cfg: ModelConfig):
+    pd = jnp.dtype(cfg.param_dtype)
+    d, di, ns, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "w_z": dense_init(ks[0], (d, di), d, pd),      # output gate
+        "w_x": dense_init(ks[1], (d, di), d, pd),      # ssm input channels
+        "w_B": dense_init(ks[2], (d, ns), d, pd),
+        "w_C": dense_init(ks[3], (d, ns), d, pd),
+        "w_dt": dense_init(ks[4], (d, H), d, pd),
+        "conv_x": dense_init(ks[5], (cfg.conv_width, di), cfg.conv_width, pd),
+        "conv_bc": dense_init(ks[6], (cfg.conv_width, 2 * ns),
+                              cfg.conv_width, pd),
+        "conv_b_x": jnp.zeros((di,), pd),
+        "conv_b_bc": jnp.zeros((2 * ns,), pd),
+        "A_log": jnp.zeros((H,), pd),                  # A = -exp(A_log)
+        "D": jnp.ones((H,), pd),
+        "dt_bias": jnp.zeros((H,), pd),
+        "norm_scale": jnp.ones((di,), pd),
+        "w_out": dense_init(ks[7], (di, d), di, pd),
+    }
+
+
+def _causal_conv(u, w, b, state=None):
+    """u: (B, S, C); w: (K, C) depthwise.  state: (B, K-1, C) for decode."""
+    K = w.shape[0]
+    if state is not None:
+        u_ext = jnp.concatenate([state.astype(u.dtype), u], axis=1)
+    else:
+        u_ext = jnp.pad(u, ((0, 0), (K - 1, 0), (0, 0)))
+    new_state = u_ext[:, -(K - 1):, :]
+    out = sum(u_ext[:, i:i + u.shape[1], :] * w[i][None, None] for i in range(K))
+    return out + b[None, None], new_state
+
+
+def _ssd_chunked(x, dt, A, B, C, chunk: int):
+    """Chunked SSD scan.
+    x: (b, S, H, hd)   dt: (b, S, H)   A: (H,) negative
+    B, C: (b, S, N)    returns y: (b, S, H, hd)
+    """
+    b, S, H, hd = x.shape
+    N = B.shape[-1]
+    nc = S // chunk
+    xc = x.reshape(b, nc, chunk, H, hd)
+    dtc = dt.reshape(b, nc, chunk, H)
+    Bc = B.reshape(b, nc, chunk, N)
+    Cc = C.reshape(b, nc, chunk, N)
+
+    la = dtc * A[None, None, None]                    # log decay per step (<=0)
+    seg = jnp.cumsum(la, axis=2)                      # (b,nc,chunk,H)
+    total = seg[:, :, -1]                             # (b,nc,H)
+
+    # intra-chunk (local) attention-like term
+    dmat = seg[:, :, :, None, :] - seg[:, :, None, :, :]   # (b,nc,i,j,H)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    dmat = jnp.where(causal[None, None, :, :, None], dmat, -jnp.inf)
+    Lw = jnp.exp(dmat)
+    cb = jnp.einsum("bnik,bnjk->bnij", Cc, Bc)        # (b,nc,i,j)
+    y_local = jnp.einsum("bnij,bnijh,bnjh,bnjhd->bnihd", cb, Lw, dtc, xc)
+
+    # chunk summary states: S_n = sum_j exp(total - seg_j) dt_j B_j x_j^T
+    wdecay = jnp.exp(total[:, :, None, :] - seg)      # (b,nc,chunk,H)
+    states = jnp.einsum("bnjh,bnjh,bnjk,bnjhd->bnhkd",
+                        wdecay, dtc, Bc, xc)          # (b,nc,H,N,hd)
+
+    # cross-chunk recurrence: carry_n = exp(total_n) carry_{n-1} + states_n
+    decay = jnp.exp(total)                            # (b,nc,H)
+
+    def combine(a, c):
+        d1, s1 = a
+        d2, s2 = c
+        return d1 * d2, s2 + d2[..., None, None] * s1
+
+    dec_sc, st_sc = jax.lax.associative_scan(combine, (decay, states), axis=1)
+    carry_in = jnp.concatenate(
+        [jnp.zeros_like(st_sc[:, :1]), st_sc[:, :-1]], axis=1)  # (b,nc,H,N,hd)
+
+    y_carry = jnp.einsum("bnik,bnih,bnhkd->bnihd", Cc, jnp.exp(seg), carry_in)
+    final_state = st_sc[:, -1]                        # (b,H,N,hd)
+    return (y_local + y_carry).reshape(b, S, H, hd), final_state
+
+
+def apply_mamba2(p, x, cfg: ModelConfig, *, ssm_state=None, conv_state=None,
+                 chunk: int = 64):
+    """x: (B, S, d).  Training/prefill: chunked scan.  Decode (S == 1):
+    recurrent update using (ssm_state, conv_state)."""
+    ct = x.dtype
+    B_, S, d = x.shape
+    di, ns, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    hd = di // H
+
+    z = x @ p["w_z"].astype(ct)
+    xs_raw = x @ p["w_x"].astype(ct)
+    bc_raw = jnp.concatenate([x @ p["w_B"].astype(ct),
+                              x @ p["w_C"].astype(ct)], axis=-1)
+    dt_raw = x @ p["w_dt"].astype(ct)
+
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # (B,S,H)
+
+    xs_c, new_conv_x = _causal_conv(
+        xs_raw, p["conv_x"].astype(ct), p["conv_b_x"].astype(ct),
+        None if conv_state is None else conv_state[0])
+    bc_c, new_conv_bc = _causal_conv(
+        bc_raw, p["conv_bc"].astype(ct), p["conv_b_bc"].astype(ct),
+        None if conv_state is None else conv_state[1])
+    xs_c = jax.nn.silu(xs_c)
+    bc_c = jax.nn.silu(bc_c)
+    xs = xs_c.reshape(B_, S, H, hd)
+    Bv, Cv = bc_c[..., :ns], bc_c[..., ns:]
+
+    if S == 1 and ssm_state is not None:
+        dec = jnp.exp(dt[:, 0] * A[None])                     # (B,H)
+        upd = jnp.einsum("bh,bk,bhd->bhkd", dt[:, 0],
+                         Bv[:, 0].astype(jnp.float32),
+                         xs[:, 0].astype(jnp.float32))
+        new_ssm = dec[..., None, None] * ssm_state + upd      # (B,H,N,hd)
+        y = jnp.einsum("bk,bhkd->bhd", Cv[:, 0].astype(jnp.float32), new_ssm)
+        y = y[:, None].astype(ct)                             # (B,1,H,hd)
+    else:
+        y, new_ssm = _ssd_chunked(xs.astype(jnp.float32), dt, A,
+                                  Bv.astype(jnp.float32),
+                                  Cv.astype(jnp.float32),
+                                  chunk=min(chunk, S))
+        y = y.astype(ct)
+
+    y = y + xs * p["D"].astype(ct)[None, None, :, None]
+    y = y.reshape(B_, S, di)
+    # gated RMSNorm (mamba2)
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    yf = yf * jax.lax.rsqrt((yf ** 2).mean(-1, keepdims=True) + 1e-6)
+    y = (yf * p["norm_scale"].astype(jnp.float32)).astype(ct)
+    out = y @ p["w_out"].astype(ct)
+    return out, (new_ssm, (new_conv_x, new_conv_bc))
+
+
+def init_mamba2_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    H, ns = cfg.ssm_heads, cfg.ssm_state
+    hd = cfg.d_inner // H
+    return (jnp.zeros((batch, H, ns, hd), jnp.float32),
+            (jnp.zeros((batch, cfg.conv_width - 1, cfg.d_inner), dtype),
+             jnp.zeros((batch, cfg.conv_width - 1, 2 * ns), dtype)))

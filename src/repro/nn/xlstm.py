@@ -1,0 +1,285 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+mLSTM per head, with exponential gating and running stabilizer m:
+  C_t = f_t C_{t-1} + i_t v_t k_t^T ,  n_t = f_t n_{t-1} + i_t k_t
+  h_t = (C_t q_t) / max(|n_t^T q_t|, exp(-m_t))
+
+Training/prefill uses the CHUNKWISE form (sequential lax.scan over chunks,
+quadratic only within a chunk) so 4k-500k sequences never materialize an
+S x S weight matrix; decode is the O(1) recurrence.  Chunk carries
+(C: (B,H,hd,hd)) are the big tensors — they are sharding-constrained over
+the model axis via repro.sharding.ctx.
+
+sLSTM: scalar-memory recurrent cell with exponential gating — sequential
+by construction (lax.scan over time).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import ctx
+
+from .config import ModelConfig
+from .layers import dense_init
+
+
+# --------------------------------------------------------------------------
+# mLSTM
+# --------------------------------------------------------------------------
+
+def init_mlstm(key, cfg: ModelConfig):
+    pd = jnp.dtype(cfg.param_dtype)
+    d = cfg.d_model
+    di = int(d * cfg.proj_factor)
+    H = cfg.num_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "w_xin": dense_init(ks[0], (d, di), d, pd),
+        "w_zgate": dense_init(ks[1], (d, di), d, pd),
+        # per-head (block-diagonal) projections, as in xLSTM — a dense
+        # (di, di) qkv would triple the parameter count at proj_factor 2
+        "w_q": dense_init(ks[2], (H, di // H, di // H), di // H, pd),
+        "w_k": dense_init(ks[3], (H, di // H, di // H), di // H, pd),
+        "w_v": dense_init(ks[4], (H, di // H, di // H), di // H, pd),
+        "w_if": dense_init(ks[5], (di, 2 * H), di, pd),  # input/forget gates
+        "b_if": jnp.zeros((2 * H,), pd),
+        "norm_scale": jnp.ones((di,), pd),
+        "w_down": dense_init(ks[6], (di, d), di, pd),
+    }
+
+
+def _mlstm_chunk_scan(q, k, v, ig, log_f, state, chunk: int):
+    """Chunkwise mLSTM.
+    q,k,v: (B,S,H,hd) f32; ig, log_f: (B,S,H) f32 (log-space gates)
+    state: (C (B,H,hd,hd), n (B,H,hd), m (B,H)) — C,n stored scaled by
+      exp(-m).  Returns (y (B,S,H,hd), new_state).
+    """
+    B, S, H, hd = q.shape
+    nc = max(1, S // chunk)
+    c = S // nc
+    rs = lambda t: t.reshape((B, nc, c) + t.shape[2:])
+    qc, kc, vc = rs(q), rs(k), rs(v)
+    igc, lfc = rs(ig), rs(log_f)
+
+    b_cum = jnp.cumsum(lfc, axis=2)                       # (B,nc,c,H) inclusive
+    g = igc - b_cum                                       # ig_j - b_j
+    total = b_cum[:, :, -1]                               # (B,nc,H)
+
+    causal = jnp.tril(jnp.ones((c, c), bool))
+
+    def step(carry, xs):
+        C, n, m = carry                                   # scaled by exp(-m)
+        qn, kn, vn, bn, gn, tot = xs                      # per-chunk slices
+        # qn: (B,c,H,hd) ...
+        # stabilizers
+        m_intra = jnp.max(jnp.where(causal[None, :, :, None],
+                                    bn[:, :, None, :] + gn[:, None, :, :],
+                                    -jnp.inf), axis=2)    # (B,c,H): max_j<=i
+        m_i = jnp.maximum(m_intra, bn + m[:, None, :])    # (B,c,H)
+        m_i = jnp.maximum(m_i, -30.0)                     # numeric floor
+        # intra-chunk
+        Dm = bn[:, :, None, :] + gn[:, None, :, :] - m_i[:, :, None, :]
+        Dm = jnp.where(causal[None, :, :, None], Dm, -jnp.inf)
+        W = jnp.exp(Dm)                                   # (B,i,j,H)
+        s_qk = jnp.einsum("bihd,bjhd->bijh", qn, kn)
+        num = jnp.einsum("bijh,bijh,bjhv->bihv", s_qk, W, vn)
+        den_i = jnp.einsum("bijh,bijh->bih", W, s_qk)     # sum_j W_ij (q_i.k_j)
+        # inter-chunk (carry)
+        scale_c = jnp.exp(bn + m[:, None, :] - m_i)       # (B,c,H)
+        num = num + scale_c[..., None] * jnp.einsum("bihd,bhdv->bihv", qn, C)
+        den_i = den_i + scale_c * jnp.einsum("bihd,bhd->bih", qn, n)
+        y = num / jnp.maximum(jnp.abs(den_i), jnp.exp(-m_i))[..., None]
+
+        # carry update
+        m_next = jnp.maximum(tot + m, jnp.max(gn + tot[:, None, :], axis=1))
+        m_next = jnp.maximum(m_next, -30.0)
+        wj = jnp.exp(gn + tot[:, None, :] - m_next[:, None, :])  # (B,c,H)
+        C_new = (jnp.exp(tot + m - m_next)[..., None, None] * C
+                 + jnp.einsum("bjh,bjhd,bjhv->bhdv", wj, kn, vn))
+        C_new = ctx.constrain(C_new, (None, None, None, "model"))
+        n_new = (jnp.exp(tot + m - m_next)[..., None] * n
+                 + jnp.einsum("bjh,bjhd->bhd", wj, kn))
+        return (C_new, n_new, m_next), y
+
+    xs = (jnp.moveaxis(qc, 1, 0), jnp.moveaxis(kc, 1, 0),
+          jnp.moveaxis(vc, 1, 0), jnp.moveaxis(b_cum, 1, 0),
+          jnp.moveaxis(g, 1, 0), jnp.moveaxis(total, 1, 0))
+    new_state, ys = jax.lax.scan(step, state, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, H, hd)
+    return y, new_state
+
+
+def apply_mlstm(p, x, cfg: ModelConfig, *, state=None, chunk: int = 256):
+    """x: (B, S, d).  state (decode / carry-in): (C, n, m)."""
+    ct = x.dtype
+    B, S, d = x.shape
+    di = int(d * cfg.proj_factor)
+    H = cfg.num_heads
+    hd = di // H
+
+    xin = x @ p["w_xin"].astype(ct)
+    z = x @ p["w_zgate"].astype(ct)
+    xh = xin.reshape(B, S, H, hd)
+    q = jnp.einsum("bshd,hde->bshe", xh,
+                   p["w_q"].astype(ct)).astype(jnp.float32)
+    k = jnp.einsum("bshd,hde->bshe", xh,
+                   p["w_k"].astype(ct)).astype(jnp.float32) * (hd ** -0.5)
+    v = jnp.einsum("bshd,hde->bshe", xh,
+                   p["w_v"].astype(ct)).astype(jnp.float32)
+    gates = (xin @ p["w_if"].astype(ct) + p["b_if"].astype(ct)
+             ).astype(jnp.float32)
+    ig, fg = gates[..., :H], gates[..., H:]               # (B,S,H)
+    log_f = jax.nn.log_sigmoid(fg)
+
+    if state is None:
+        state = init_mlstm_cache_raw(B, H, hd)
+
+    if S == 1:
+        C, n, m = state
+        qf, kf, vf = q[:, 0], k[:, 0], v[:, 0]
+        m_new = jnp.maximum(log_f[:, 0] + m, ig[:, 0])
+        m_new = jnp.maximum(m_new, -30.0)
+        i_s = jnp.exp(ig[:, 0] - m_new)[..., None]
+        f_s = jnp.exp(log_f[:, 0] + m - m_new)[..., None]
+        C = f_s[..., None] * C + i_s[..., None] * kf[..., None] * vf[..., None, :]
+        n = f_s * n + i_s * kf
+        num = jnp.einsum("bhd,bhdv->bhv", qf, C)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n)),
+                          jnp.exp(-m_new))
+        y = (num / den[..., None])[:, None]               # (B,1,H,hd)
+        new_state = (C, n, m_new)
+    else:
+        y, new_state = _mlstm_chunk_scan(q, k, v, ig, log_f, state,
+                                         chunk=min(chunk, S))
+
+    y = y.astype(ct).reshape(B, S, di)
+    yf = y.astype(jnp.float32)
+    yf = yf * jax.lax.rsqrt((yf ** 2).mean(-1, keepdims=True) + 1e-6)
+    y = (yf * p["norm_scale"].astype(jnp.float32)).astype(ct)
+    y = y * jax.nn.silu(z)
+    return y @ p["w_down"].astype(ct), new_state
+
+
+def init_mlstm_cache_raw(batch: int, H: int, hd: int):
+    return (jnp.zeros((batch, H, hd, hd), jnp.float32),
+            jnp.zeros((batch, H, hd), jnp.float32),
+            jnp.full((batch, H), -30.0, jnp.float32))
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int):
+    di = int(cfg.d_model * cfg.proj_factor)
+    H = cfg.num_heads
+    return init_mlstm_cache_raw(batch, H, di // H)
+
+
+# --------------------------------------------------------------------------
+# sLSTM
+# --------------------------------------------------------------------------
+
+def init_slstm(key, cfg: ModelConfig):
+    pd = jnp.dtype(cfg.param_dtype)
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    return {
+        "w_x": dense_init(ks[0], (d, 4 * d), d, pd),   # i, f, z, o pre-acts
+        "w_h": dense_init(ks[1], (d, 4 * d), d, pd),
+        "b": jnp.zeros((4 * d,), pd),
+        "w_down": dense_init(ks[2], (d, d), d, pd),
+    }
+
+
+def _slstm_cell(pre, c, n, m):
+    """One sLSTM cell update (pure elementwise, cheap VJP)."""
+    ig, fg, zg, og = jnp.split(pre, 4, axis=-1)
+    log_f = jax.nn.log_sigmoid(fg)
+    m_new = jnp.maximum(log_f + m, ig)
+    i_s = jnp.exp(ig - m_new)
+    f_s = jnp.exp(log_f + m - m_new)
+    c2 = f_s * c + i_s * jnp.tanh(zg)
+    n2 = f_s * n + i_s
+    h2 = jax.nn.sigmoid(og) * c2 / jnp.maximum(n2, 1.0)
+    return c2, n2, h2, m_new
+
+
+@jax.custom_vjp
+def _slstm_scan(px, wh, b, state):
+    """Sequential sLSTM over time.  px: (S, B, 4d) f32.
+
+    custom_vjp rationale (EXPERIMENTS.md §Perf xlstm iteration): XLA's scan
+    transpose accumulates dW_h = sum_t h_{t-1}^T dpre_t INSIDE the loop,
+    reading/writing the (d,4d) accumulator every timestep (~200 TB of HBM
+    traffic at S=4096).  We instead stack dpre_t in the backward scan and
+    compute the weight gradient as ONE einsum over the stacked sequence.
+    """
+    (c, n, h, m), (hs, _) = _slstm_fwd_scan(px, wh, b, state)
+    return hs, (c, n, h, m)
+
+
+def _slstm_fwd_scan(px, wh, b, state):
+    def step(carry, px_t):
+        c, n, h, m = carry
+        pre = px_t + h @ wh + b
+        c2, n2, h2, m2 = _slstm_cell(pre, c, n, m)
+        return (c2, n2, h2, m2), (h2, (c, n, h, m))
+
+    final, (hs, saved) = jax.lax.scan(step, state, px)
+    return final, (hs, saved)
+
+
+def _slstm_vjp_fwd(px, wh, b, state):
+    final, (hs, saved) = _slstm_fwd_scan(px, wh, b, state)
+    # saved: per-step PRE-state (c,n,h,m) stacked over time (S, B, d) x4
+    return (hs, final), (px, wh, b, saved)
+
+
+def _slstm_vjp_bwd(res, cts):
+    px, wh, b, saved = res
+    dhs, dfinal = cts
+
+    def bwd_step(carry, xs):
+        dc, dn, dh, dm = carry
+        px_t, dh_out, (c_p, n_p, h_p, m_p) = xs
+        pre = px_t + h_p @ wh + b                    # recompute (no save)
+        _, cell_vjp = jax.vjp(_slstm_cell, pre, c_p, n_p, m_p)
+        dpre, dc_p, dn_p, dm_p = cell_vjp((dc, dn, dh + dh_out, dm))
+        dh_p = dpre @ wh.T
+        return (dc_p, dn_p, dh_p, dm_p), dpre
+
+    dstate, dpre_stack = jax.lax.scan(
+        bwd_step, dfinal, (px, dhs, saved), reverse=True)
+    # weight/bias grads as single contractions over the stacked sequence
+    _, _, h_stack, _ = saved
+    dwh = jnp.einsum("sbd,sbe->de", h_stack, dpre_stack)
+    db = dpre_stack.sum((0, 1))
+    return dpre_stack, dwh, db, dstate
+
+
+_slstm_scan.defvjp(_slstm_vjp_fwd, _slstm_vjp_bwd)
+
+
+def apply_slstm(p, x, cfg: ModelConfig, *, state=None):
+    """x: (B, S, d); sequential scan over S.  state: (c, n, h, m)."""
+    ct = x.dtype
+    B, S, d = x.shape
+    pre_x = (x @ p["w_x"].astype(ct)).astype(jnp.float32)      # (B,S,4d)
+    wh = p["w_h"].astype(jnp.float32)
+    b = p["b"].astype(jnp.float32)
+
+    if state is None:
+        state = init_slstm_cache_raw(B, d)
+
+    hs, new_state = _slstm_scan(jnp.moveaxis(pre_x, 1, 0), wh, b, state)
+    y = jnp.moveaxis(hs, 0, 1).astype(ct)
+    return y @ p["w_down"].astype(ct), new_state
+
+
+def init_slstm_cache_raw(batch: int, d: int):
+    z = jnp.zeros((batch, d), jnp.float32)
+    return (z, jnp.ones((batch, d), jnp.float32), z, z)
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int):
+    return init_slstm_cache_raw(batch, cfg.d_model)

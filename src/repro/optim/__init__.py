@@ -1,0 +1,2 @@
+from .optimizers import (OptimizerConfig, init_opt_state, apply_update,
+                         lr_schedule)  # noqa: F401

@@ -1,0 +1,80 @@
+"""Server-side optimizers operating on device-local flat vectors.
+
+COCO-EF's aggregated update ghat already contains the learning rate
+(eq. 4), so the paper-faithful server optimizer is plain SGD:
+theta <- theta - ghat.  Momentum/Adam variants (beyond-paper) treat
+ghat/gamma as the gradient estimate.
+
+State lives as flat f32 vectors in the same device-local layout as the
+error vectors (repro.core.cocoef), which keeps checkpointing uniform.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    kind: str = "sgd"            # sgd | momentum | adam
+    momentum: float = 0.9
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+
+
+def init_opt_state(cfg: OptimizerConfig, n: int):
+    if cfg.kind == "sgd":
+        return ()
+    if cfg.kind == "momentum":
+        return (jnp.zeros((n,), jnp.float32),)
+    if cfg.kind == "adam":
+        return (jnp.zeros((n,), jnp.float32), jnp.zeros((n,), jnp.float32))
+    raise ValueError(cfg.kind)
+
+
+def apply_update(cfg: OptimizerConfig, params_flat, ghat, state, step,
+                 gamma):
+    """params_flat: (n,) f32 local; ghat: aggregated update (incl. gamma).
+    Returns (new_params, new_state)."""
+    if cfg.weight_decay:
+        ghat = ghat + cfg.weight_decay * gamma * params_flat
+    if cfg.kind == "sgd":
+        return params_flat - ghat, state
+    if cfg.kind == "momentum":
+        (m,) = state
+        m = cfg.momentum * m + ghat
+        return params_flat - m, (m,)
+    if cfg.kind == "adam":
+        m, v = state
+        g = ghat / jnp.maximum(gamma, 1e-20)   # undo lr for the estimate
+        m = cfg.beta1 * m + (1 - cfg.beta1) * g
+        v = cfg.beta2 * v + (1 - cfg.beta2) * g * g
+        t = step.astype(jnp.float32) + 1.0
+        mh = m / (1 - cfg.beta1 ** t)
+        vh = v / (1 - cfg.beta2 ** t)
+        return params_flat - gamma * mh / (jnp.sqrt(vh) + cfg.eps), (m, v)
+    raise ValueError(cfg.kind)
+
+
+def lr_schedule(kind: str, base: float, warmup: int = 0,
+                total: Optional[int] = None):
+    """Returns gamma(step).  'constant' is the paper's setting (Sec. V);
+    'rsqrt' matches the decaying scheme of Fig. 6; 'cosine' for production."""
+    def f(step):
+        s = jnp.asarray(step, jnp.float32)
+        g = jnp.asarray(base, jnp.float32)
+        if kind == "rsqrt":
+            g = g / jnp.sqrt(s + 1.0)
+        elif kind == "cosine":
+            assert total is not None
+            frac = jnp.clip(s / max(total, 1), 0.0, 1.0)
+            g = g * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        if warmup > 0:
+            g = g * jnp.clip((s + 1.0) / warmup, 0.0, 1.0)
+        return g
+    return f

@@ -1,0 +1,1 @@
+from . import ctx, rules  # noqa: F401

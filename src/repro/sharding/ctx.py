@@ -1,0 +1,93 @@
+"""Activation-sharding context.
+
+Model code calls `constrain(x, (..., "model", ...))` at strategic points
+(residual stream, recurrent carries).  Outside a mesh context these are
+no-ops, so smoke tests and the paper-reproduction experiments run unchanged
+on one device; inside `use_mesh(mesh)` they become GSPMD sharding
+constraints.  Axis names not present on the active mesh are dropped.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_ACTIVE: contextvars.ContextVar[Optional[Mesh]] = contextvars.ContextVar(
+    "repro_active_mesh", default=None)
+_WEIGHT_GATHER: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_weight_gather", default=None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh], weight_gather=None):
+    token = _ACTIVE.set(mesh)
+    tok2 = _WEIGHT_GATHER.set(weight_gather)
+    try:
+        yield mesh
+    finally:
+        _ACTIVE.reset(token)
+        _WEIGHT_GATHER.reset(tok2)
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _ACTIVE.get()
+
+
+def gather_block(block_params, compute_dtype):
+    """ZeRO-3-style just-in-time weight gathering (DESIGN.md Sec. 5 /
+    EXPERIMENTS.md §Perf): when the training setup registers a
+    weight_gather fn (FSDP archs), cast each layer-slice weight to the
+    compute dtype and re-constrain it to its TP-only sharding *inside* the
+    layer scan — the all-gather then moves bf16 weight shards instead of
+    f32 activation partial-sums.  No-op otherwise."""
+    fn = _WEIGHT_GATHER.get()
+    if fn is None:
+        return block_params
+    return fn(block_params, compute_dtype)
+
+
+UNC = "*"  # sentinel: leave this dim's sharding to the compiler
+
+
+def _filter(spec_entry, axis_names):
+    if spec_entry is None:
+        return None
+    if spec_entry == UNC:
+        return UNC
+    if isinstance(spec_entry, str):
+        return spec_entry if spec_entry in axis_names else None
+    # tuple of axis names
+    kept = tuple(a for a in spec_entry if a in axis_names)
+    return kept if kept else None
+
+
+def constrain(x, spec: Sequence[Union[str, None, Tuple[str, ...]]]):
+    """Apply a sharding constraint if a mesh is active (else identity)."""
+    mesh = _ACTIVE.get()
+    if mesh is None:
+        return x
+    names = set(mesh.axis_names)
+    entries = [_filter(e, names) for e in spec]
+    # divisibility guard: drop axes that don't divide the dim
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    clean = []
+    for dim, e in zip(x.shape[-len(entries):] if len(entries) <= x.ndim
+                      else x.shape, entries):
+        if e is None or e == UNC:
+            clean.append(e)
+            continue
+        axes = (e,) if isinstance(e, str) else e
+        total = 1
+        for a in axes:
+            total *= sizes[a]
+        clean.append(e if dim % total == 0 else UNC)
+    # left-pad for leading dims (vmap/scan may add axes): leave them to the
+    # compiler (the vmap coding dim / inner batch keep their sharding)
+    pad = x.ndim - len(clean)
+    full = [P.UNCONSTRAINED if e == UNC else e
+            for e in [UNC] * pad + clean]
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*full)))

@@ -1,0 +1,7 @@
+"""Test config.  NOTE: no XLA_FLAGS here — single-device tests must see one
+device (the multi-device collective/integration tests spawn subprocesses
+with their own xla_force_host_platform_device_count)."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,74 @@
+"""Gradient-coding tests: allocation structure, encode weights, and the
+unbiasedness identity  E_I[sum_i I_i g_i] = grad F  (eq. 3 + eq. 8)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import coding
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1000), n=st.sampled_from([8, 20, 100]),
+       d=st.integers(1, 6))
+def test_random_allocation_dk(seed, n, d):
+    alloc = coding.random_allocation(seed, n, n, d)
+    assert alloc.S.shape == (n, n)
+    np.testing.assert_array_equal(alloc.d, min(d, n))
+
+
+def test_cyclic_allocation_pairwise_balance():
+    n, d = 12, 3
+    alloc = coding.cyclic_allocation(n, n, d)
+    np.testing.assert_array_equal(alloc.d, d)
+    # every device holds exactly d subsets
+    np.testing.assert_array_equal(alloc.S.sum(1), d)
+
+
+def test_encode_weights_normalization():
+    """(1-p) * sum_i W[i,k] == 1 for all k — this is what makes the masked
+    aggregate unbiased."""
+    alloc = coding.random_allocation(0, 50, 50, 4)
+    for p in (0.0, 0.2, 0.7):
+        W = np.asarray(coding.encode_weights(alloc, p))
+        np.testing.assert_allclose((1 - p) * W.sum(0), 1.0, rtol=1e-5)
+
+
+def test_coded_aggregate_unbiased():
+    """E over the Bernoulli mask of sum_i I_i g_i equals grad F exactly
+    (closed form: independence across devices)."""
+    N = M = 20
+    D = 7
+    p = 0.3
+    alloc = coding.random_allocation(1, N, M, 3)
+    W = np.asarray(coding.encode_weights(alloc, p))
+    rng = np.random.default_rng(0)
+    grads = rng.normal(size=(M, D))          # per-subset gradients
+    g = W @ grads                            # (N, D) coded vectors
+    # E[sum_i I_i g_i] = (1-p) sum_i g_i
+    expected = grads.sum(0)                  # grad F
+    np.testing.assert_allclose((1 - p) * g.sum(0), expected, rtol=1e-6)
+
+
+def test_straggler_mask_deterministic_and_rate():
+    key = jax.random.PRNGKey(0)
+    m1 = coding.straggler_mask(key, 7, 1000, 0.3)
+    m2 = coding.straggler_mask(key, 7, 1000, 0.3)
+    np.testing.assert_array_equal(np.asarray(m1), np.asarray(m2))
+    m3 = coding.straggler_mask(key, 8, 1000, 0.3)
+    assert not np.array_equal(np.asarray(m1), np.asarray(m3))
+    assert abs(float(m1.mean()) - 0.7) < 0.06
+
+
+def test_redundancy_theta():
+    alloc = coding.random_allocation(0, 10, 10, 10)  # full replication
+    assert coding.redundancy_theta(alloc) == pytest.approx(0.0)
+    alloc1 = coding.random_allocation(0, 10, 10, 1)
+    assert coding.redundancy_theta(alloc1) == pytest.approx(10 * (1 - 0.1))
+
+
+def test_invalid_p():
+    alloc = coding.random_allocation(0, 4, 4, 2)
+    with pytest.raises(ValueError):
+        coding.encode_weights(alloc, 1.0)

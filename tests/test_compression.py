@@ -1,0 +1,109 @@
+"""Unit + property tests for the compression functions (Sec. III / Asm. 5)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compression as C
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _rand(n, seed=0, scale=3.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(seed), (n,))
+
+
+# ---------------------------------------------------------------------------
+# contraction property:  ||C(x) - x||^2 <= delta ||x||^2   (Assumption 5)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), group=st.sampled_from([4, 16, 64]),
+       logn=st.integers(6, 10))
+def test_grouped_sign_contraction(seed, group, logn):
+    n = (1 << logn)
+    n = (n // group) * group
+    x = np.asarray(_rand(n, seed))
+    c = np.asarray(C.GroupedSign(group_size=group).apply(jnp.asarray(x)))
+    delta = C.GroupedSign(group_size=group).delta(n)
+    lhs = np.sum((c - x) ** 2)
+    rhs = delta * np.sum(x ** 2)
+    assert lhs <= rhs * (1 + 1e-4) + 1e-6
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), k=st.integers(1, 32))
+def test_topk_contraction(seed, k):
+    n = 128
+    x = np.asarray(_rand(n, seed))
+    comp = C.TopK(k=k)
+    c = np.asarray(comp.apply(jnp.asarray(x)))
+    assert np.sum((c - x) ** 2) <= comp.delta(n) * np.sum(x ** 2) + 1e-6
+    assert (c != 0).sum() <= k
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), k=st.integers(1, 16),
+       block=st.sampled_from([32, 64, 128]))
+def test_block_topk_contraction(seed, k, block):
+    n = block * 8
+    x = np.asarray(_rand(n, seed))
+    comp = C.BlockTopK(k_per_block=k, block_size=block)
+    c = np.asarray(comp.apply(jnp.asarray(x)))
+    assert np.sum((c - x) ** 2) <= comp.delta(n) * np.sum(x ** 2) + 1e-6
+    nnz = (c.reshape(-1, block) != 0).sum(-1)
+    assert (nnz <= k).all()
+
+
+def test_topk_keeps_largest():
+    x = jnp.asarray([0.1, -5.0, 0.2, 3.0, -0.05, 1.0])
+    c = np.asarray(C.TopK(k=2).apply(x))
+    assert set(np.nonzero(c)[0].tolist()) == {1, 3}
+    assert c[1] == -5.0 and c[3] == 3.0
+
+
+def test_grouped_sign_value():
+    x = jnp.asarray([1.0, -2.0, 3.0, -4.0])
+    c = np.asarray(C.GroupedSign(group_size=4).apply(x))
+    np.testing.assert_allclose(c, [2.5, -2.5, 2.5, -2.5], rtol=1e-6)
+    # two groups
+    c2 = np.asarray(C.GroupedSign(group_size=2).apply(x))
+    np.testing.assert_allclose(c2, [1.5, -1.5, 3.5, -3.5], rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# unbiasedness of the baseline compressors (Monte Carlo)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("comp", [C.StochasticSign(), C.RandK(k=16)])
+def test_unbiased_mc(comp):
+    n, reps = 64, 4000
+    x = _rand(n, seed=3, scale=1.0)
+    keys = jax.random.split(jax.random.PRNGKey(0), reps)
+    samples = jax.vmap(lambda k: comp.apply(x, k))(keys)
+    mean = samples.mean(0)
+    se = samples.std(0) / np.sqrt(reps)
+    err = np.abs(np.asarray(mean - x))
+    assert (err <= 6 * np.asarray(se) + 5e-3).mean() > 0.97
+
+
+# ---------------------------------------------------------------------------
+# wire size accounting
+# ---------------------------------------------------------------------------
+
+def test_wire_bits():
+    assert C.GroupedSign().wire_bits(100) == 100 + 32          # M0 = 1
+    assert C.GroupedSign(group_size=50).wire_bits(100) == 100 + 64
+    assert C.TopK(k=2).wire_bits(100) == 2 * 64
+    assert C.Identity().wire_bits(100) == 3200
+    # equal-overhead pairs used in Sec. V
+    assert (C.GroupedSign().wire_bits(100)
+            == C.StochasticSign().wire_bits(100))
+
+
+def test_registry():
+    assert isinstance(C.get_compressor("sign"), C.GroupedSign)
+    assert isinstance(C.get_compressor("topk", k=3), C.TopK)
+    with pytest.raises(KeyError):
+        C.get_compressor("nope")

@@ -1,0 +1,106 @@
+"""Algorithm-1 semantics: EF conservation, straggler freezing, convergence
+ordering of methods on the paper's linear-regression task."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import coding, compression as C, error_feedback as EF
+from repro.data.tasks import linreg_task
+
+
+@pytest.fixture(scope="module")
+def task():
+    grad_fn, loss_fn, theta0, _ = linreg_task(seed=0)
+    alloc = coding.random_allocation(0, 100, 100, 5)
+    W = coding.encode_weights(alloc, 0.2)
+    return grad_fn, loss_fn, theta0, W
+
+
+def test_ef_conservation(task):
+    """theta update + error update conserve the accumulator exactly:
+    for non-stragglers,  C(acc) + e' == acc  (floating-point assoc aside)."""
+    grad_fn, _, theta0, W = task
+    st = EF.EFState.init(theta0, 100)
+    comp = C.GroupedSign(group_size=20)
+    gamma = 1e-5
+    mask = jnp.ones((100,))
+    g = W @ grad_fn(st.theta)
+    acc = gamma * g + st.e
+    st2 = EF.cocoef_step(st, grad_fn, W, mask, gamma, comp)
+    c = jax.vmap(comp.apply)(acc)
+    np.testing.assert_allclose(np.asarray(c + st2.e), np.asarray(acc),
+                               rtol=1e-5, atol=1e-7)
+    # server applied exactly sum of compressed messages
+    np.testing.assert_allclose(np.asarray(st.theta - st2.theta),
+                               np.asarray(c.sum(0)), rtol=1e-5, atol=1e-6)
+
+
+def test_straggler_freezes_error(task):
+    grad_fn, _, theta0, W = task
+    st = EF.EFState.init(theta0, 100)
+    comp = C.GroupedSign()
+    # warm up one full step so e != 0
+    st = EF.cocoef_step(st, grad_fn, W, jnp.ones((100,)), 1e-5, comp)
+    mask = jnp.zeros((100,)).at[:50].set(1.0)
+    st2 = EF.cocoef_step(st, grad_fn, W, mask, 1e-5, comp)
+    # stragglers (mask 0) keep e, non-stragglers change it
+    np.testing.assert_array_equal(np.asarray(st2.e[50:]),
+                                  np.asarray(st.e[50:]))
+    assert not np.allclose(np.asarray(st2.e[:50]), np.asarray(st.e[:50]))
+
+
+def test_coco_keeps_zero_error(task):
+    grad_fn, _, theta0, W = task
+    st = EF.EFState.init(theta0, 100)
+    st2 = EF.coco_step(st, grad_fn, W, jnp.ones((100,)), 1e-5,
+                       C.GroupedSign())
+    assert float(jnp.abs(st2.e).max()) == 0.0
+
+
+def _run(method, comp, task, gamma, T=150, needs_key=False, diff=False):
+    grad_fn, loss_fn, theta0, W = task
+    st = (EF.DiffState if diff else EF.EFState).init(theta0, 100)
+    key = jax.random.PRNGKey(42)
+    for t in range(T):
+        mask = coding.straggler_mask(key, t, 100, 0.2)
+        kk = jax.random.fold_in(jax.random.PRNGKey(7), t) if needs_key else None
+        if method is EF.uncompressed_step:
+            st = method(st, grad_fn, W, mask, gamma, step=t)
+        else:
+            st = method(st, grad_fn, W, mask, gamma, comp, step=t, key=kk)
+    return float(loss_fn(st.theta))
+
+
+def test_convergence_ordering(task):
+    """Paper Fig. 2/5 claims at a coarse level: every method reduces the
+    loss; COCO-EF(Sign) ~ uncompressed << Unbiased(Sign); EF > no-EF."""
+    _, loss_fn, theta0, _ = task
+    l0 = float(loss_fn(theta0))
+    l_cocoef = _run(EF.cocoef_step, C.GroupedSign(), task, 1e-5)
+    l_coco = _run(EF.coco_step, C.GroupedSign(), task, 1e-5)
+    l_unb = _run(EF.unbiased_step, C.StochasticSign(), task, 2e-6,
+                 needs_key=True)
+    l_unc = _run(EF.uncompressed_step, None, task, 1e-5)
+    assert l_cocoef < 0.05 * l0
+    assert l_cocoef < l_unb          # biased + EF beats unbiased @ equal bits
+    assert l_cocoef < l_coco         # EF helps
+    assert l_cocoef < 3.0 * l_unc    # near the uncompressed bound
+
+
+def test_decaying_lr_worse(task):
+    """Fig. 6: decaying lr hurts COCO-EF (stale error dominance)."""
+    grad_fn, loss_fn, theta0, W = task
+    key = jax.random.PRNGKey(42)
+
+    def run(gamma_fn):
+        st = EF.EFState.init(theta0, 100)
+        for t in range(150):
+            mask = coding.straggler_mask(key, t, 100, 0.5)
+            st = EF.cocoef_step(st, grad_fn, W, mask, gamma_fn(t),
+                                C.GroupedSign(), step=t)
+        return float(loss_fn(st.theta))
+
+    const = run(lambda t: 2e-5)
+    decay = run(lambda t: 2e-5 / np.sqrt(t + 1))
+    assert const < decay

@@ -1,0 +1,123 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.sign_pack import ef_sign_fused, sign_decode_reduce, \
+    sign_pack
+from repro.kernels.topk_block import block_topk
+
+
+@pytest.mark.parametrize("group", [128, 256, 512])
+@pytest.mark.parametrize("blocks", [1, 4])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_sign_pack_sweep(group, blocks, dtype):
+    n = 8 * group * blocks
+    x = (jax.random.normal(jax.random.PRNGKey(group + blocks), (n,)) * 2
+         ).astype(dtype)
+    w1, s1 = sign_pack(x, group, interpret=True)
+    w2, s2 = ref.sign_pack_ref(x, group)
+    np.testing.assert_array_equal(np.asarray(w1), np.asarray(w2))
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-6)
+
+
+def test_pack_unpack_roundtrip_on_quantized():
+    """unpack(pack(x)) equals sign(x)*scale -> packing a sign-quantized
+    vector is lossless to ~1ulp."""
+    n, g = 8 * 256, 256
+    x = jax.random.normal(jax.random.PRNGKey(0), (n,))
+    w, s = sign_pack(x, g, interpret=True)
+    rt = ref.sign_unpack_ref(w, s, g)
+    expected = np.where(np.asarray(x) >= 0, 1.0, -1.0) * \
+        np.repeat(np.asarray(s), g)
+    np.testing.assert_allclose(np.asarray(rt), expected, rtol=1e-6)
+
+
+@pytest.mark.parametrize("group", [128, 512])
+@pytest.mark.parametrize("mask", [0.0, 1.0])
+def test_ef_fused_sweep(group, mask):
+    n = 8 * group * 2
+    g = jax.random.normal(jax.random.PRNGKey(1), (n,))
+    e = jax.random.normal(jax.random.PRNGKey(2), (n,)) * 0.1
+    outs_k = ef_sign_fused(g, e, 0.01, mask, group, interpret=True)
+    outs_r = ref.ef_sign_fused_ref(g, e, 0.01, mask, group)
+    for a, b in zip(outs_k, outs_r):
+        if a.dtype == jnp.uint32:
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        else:
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-7)
+
+
+def test_ef_fused_conservation():
+    """words/scales decode + e_new reconstruct acc exactly (Algorithm 1)."""
+    n, g = 8 * 256, 256
+    gv = jax.random.normal(jax.random.PRNGKey(1), (n,))
+    e = jax.random.normal(jax.random.PRNGKey(2), (n,)) * 0.1
+    gamma = 0.05
+    words, scales, c, e_new = ef_sign_fused(gv, e, gamma, 1.0, g,
+                                            interpret=True)
+    acc = gamma * np.asarray(gv) + np.asarray(e)
+    np.testing.assert_allclose(np.asarray(c) + np.asarray(e_new), acc,
+                               rtol=1e-5, atol=1e-7)
+
+
+@pytest.mark.parametrize("n_senders", [2, 4, 16])
+def test_sign_decode_reduce(n_senders):
+    n, g = 8 * 256, 256
+    ws, ss = [], []
+    for i in range(n_senders):
+        x = jax.random.normal(jax.random.PRNGKey(i), (n,))
+        w, s = ref.sign_pack_ref(x, g)
+        ws.append(w)
+        ss.append(s)
+    words = jnp.stack(ws)
+    scales = jnp.stack(ss)
+    mask = (jnp.arange(n_senders) % 2).astype(jnp.float32)
+    out_k = sign_decode_reduce(words, scales, mask, g, interpret=True)
+    out_r = ref.sign_decode_reduce_ref(words, scales, mask, g)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000), k=st.sampled_from([4, 8, 16]),
+       block=st.sampled_from([128, 256]))
+def test_block_topk_sweep(seed, k, block):
+    n = 8 * block
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n,))
+    out_k = block_topk(x, k, block, interpret=True)
+    out_r = ref.block_topk_ref(x, k, block)
+    np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
+    nnz = (np.asarray(out_k).reshape(-1, block) != 0).sum(-1)
+    assert (nnz == k).all()
+
+
+def test_block_topk_bf16():
+    n, k, block = 8 * 128, 4, 128
+    x = (jax.random.normal(jax.random.PRNGKey(5), (n,))).astype(jnp.bfloat16)
+    out_k = block_topk(x, k, block, interpret=True)
+    out_r = ref.block_topk_ref(x, k, block)
+    np.testing.assert_array_equal(np.asarray(out_k.astype(jnp.float32)),
+                                  np.asarray(out_r.astype(jnp.float32)))
+
+
+@pytest.mark.parametrize("softcap,window,groups", [
+    (0.0, 0, 1), (50.0, 0, 2), (0.0, 64, 2), (30.0, 32, 4)])
+def test_flash_attention(softcap, window, groups):
+    from repro.kernels.flash_attention import flash_attention
+    B, Hkv, S, hd = 2, 2, 512, 64
+    H = Hkv * groups
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (B, H, S, hd)) * hd ** -0.5
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, Hkv, S, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, Hkv, S, hd))
+    out_k = flash_attention(q, k, v, softcap=softcap, window=window,
+                            groups=groups, interpret=True)
+    out_r = ref.flash_attention_ref(q, k, v, softcap=softcap, window=window,
+                                    groups=groups)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               rtol=2e-4, atol=2e-5)

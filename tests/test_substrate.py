@@ -1,0 +1,172 @@
+"""Substrate tests: checkpointing, data pipeline, optimizers, sharding
+rules, cocoef flatten/unflatten."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (elastic_rescale_ef, latest_step,
+                              restore_checkpoint, save_checkpoint)
+from repro.core.cocoef import FlatMeta, flatten_local, padded_size, \
+    unflatten_local
+from repro.data.pipeline import SyntheticLMConfig, subset_batch_for_rank, \
+    synthetic_lm_batch
+from repro.optim import OptimizerConfig, apply_update, init_opt_state, \
+    lr_schedule
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    state = {
+        "params": {"w": jnp.arange(12.0).reshape(3, 4),
+                   "b": jnp.ones((4,), jnp.bfloat16)},
+        "e": jnp.full((2, 8), 0.5),
+        "opt": (jnp.zeros((8,)),),
+    }
+    save_checkpoint(tmp_path, 7, state, extra={"note": "x"})
+    save_checkpoint(tmp_path, 12, state)
+    assert latest_step(tmp_path) == 12
+    step, out = restore_checkpoint(tmp_path, state, step=7)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert a.dtype == b.dtype
+
+
+def test_checkpoint_resume_latest(tmp_path):
+    s1 = {"x": jnp.ones((4,))}
+    save_checkpoint(tmp_path, 1, s1)
+    save_checkpoint(tmp_path, 2, {"x": 2 * jnp.ones((4,))})
+    step, out = restore_checkpoint(tmp_path, s1)
+    assert step == 2
+    np.testing.assert_array_equal(np.asarray(out["x"]), 2 * np.ones(4))
+
+
+def test_elastic_rescale_ef():
+    old = np.arange(2 * 4 * 6, dtype=np.float32).reshape(2, 4, 6)
+    new = elastic_rescale_ef(old, (2, 4), (3, 4), 8)
+    assert new.shape == (3, 4, 8)
+    np.testing.assert_array_equal(new[:2, :, :6], old)     # carried
+    assert (new[2] == 0).all()                             # new ranks zero
+    # shrink
+    new2 = elastic_rescale_ef(old, (2, 4), (1, 4), 4)
+    np.testing.assert_array_equal(new2[0, :, :4], old[0, :, :4])
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_pipeline_deterministic():
+    key = jax.random.PRNGKey(0)
+    a = synthetic_lm_batch(key, 5, 4, 16, 1000)
+    b = synthetic_lm_batch(key, 5, 4, 16, 1000)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    c = synthetic_lm_batch(key, 6, 4, 16, 1000)
+    assert not np.array_equal(np.asarray(a), np.asarray(c))
+    assert a.shape == (4, 17)
+    assert int(a.max()) < 1000 and int(a.min()) >= 0
+
+
+def test_subset_batch_weights():
+    key = jax.random.PRNGKey(0)
+    toks, w = subset_batch_for_rank(key, 3, np.array([0, 2]),
+                                    np.array([0.5, 0.25]), 4, 16, 100)
+    assert toks.shape == (8, 17)
+    np.testing.assert_allclose(np.asarray(w),
+                               [0.5] * 4 + [0.25] * 4)
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+def test_sgd_and_momentum():
+    p = jnp.ones((8,))
+    ghat = 0.1 * jnp.ones((8,))
+    cfg = OptimizerConfig(kind="sgd")
+    p2, _ = apply_update(cfg, p, ghat, (), jnp.int32(0), 0.1)
+    np.testing.assert_allclose(np.asarray(p2), 0.9 * np.ones(8), rtol=1e-6)
+
+    cfg = OptimizerConfig(kind="momentum", momentum=0.5)
+    st = init_opt_state(cfg, 8)
+    p2, st = apply_update(cfg, p, ghat, st, jnp.int32(0), 0.1)
+    p3, st = apply_update(cfg, p2, ghat, st, jnp.int32(1), 0.1)
+    # second step: m = 0.5*0.1+0.1 = 0.15
+    np.testing.assert_allclose(np.asarray(p3), np.asarray(p2) - 0.15,
+                               rtol=1e-6)
+
+
+def test_adam_direction():
+    cfg = OptimizerConfig(kind="adam")
+    st = init_opt_state(cfg, 4)
+    p = jnp.zeros((4,))
+    ghat = 0.01 * jnp.asarray([1.0, -1.0, 2.0, 0.0])
+    p2, st = apply_update(cfg, p, ghat, st, jnp.int32(0), 0.01)
+    assert float(p2[0]) < 0 and float(p2[1]) > 0 and float(p2[3]) == 0
+
+
+def test_lr_schedules():
+    f = lr_schedule("constant", 1e-3)
+    assert float(f(0)) == pytest.approx(1e-3)
+    assert float(f(100)) == pytest.approx(1e-3)
+    f = lr_schedule("rsqrt", 2e-5)
+    assert float(f(0)) == pytest.approx(2e-5)
+    assert float(f(3)) == pytest.approx(1e-5)
+    f = lr_schedule("constant", 1e-3, warmup=10)
+    assert float(f(0)) == pytest.approx(1e-4)
+
+
+# ---------------------------------------------------------------------------
+# flatten/unflatten + padding
+# ---------------------------------------------------------------------------
+
+def test_flatten_roundtrip():
+    leaves = [jnp.arange(6.0).reshape(2, 3),
+              jnp.ones((5,), jnp.bfloat16),
+              jnp.zeros((1, 2, 2), jnp.float32)]
+    flat, meta = flatten_local(leaves, chunk_ranks=4, group_size=32)
+    assert flat.shape[0] == padded_size(15, 4, 32)
+    out = unflatten_local(flat, meta)
+    for a, b in zip(leaves, out):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+        assert a.dtype == b.dtype
+
+
+def test_padded_size():
+    assert padded_size(1, 4, 32) == 128
+    assert padded_size(128, 4, 32) == 128
+    assert padded_size(129, 4, 32) == 256
+    assert padded_size(100, 2, 32, num_buckets=2) == 128
+
+
+# ---------------------------------------------------------------------------
+# sharding rules
+# ---------------------------------------------------------------------------
+
+def test_rules_fallback_placement():
+    """phi3: 40 heads don't divide model=16 -> head_dim gets the axis."""
+    import os
+    from jax.sharding import PartitionSpec as P
+    from repro.configs import REGISTRY
+    from repro.nn import Model
+    from repro.sharding import rules
+    if len(jax.devices()) != 1:
+        pytest.skip("single-device rule check")
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    # fake axis sizes by monkeypatching through a larger abstract mesh is
+    # overkill; check the pure functions instead:
+    sizes = {"data": 16, "model": 16}
+    spec = rules._check_divisible((None, "model", None), (5120, 40, 128),
+                                  sizes)
+    assert spec == (None, None, "model")
+    spec = rules._check_divisible((None, "model", None), (5120, 48, 128),
+                                  sizes)
+    assert spec == (None, "model", None)
+    spec = rules._check_divisible(("model",), (41,), sizes)
+    assert spec == (None,)
