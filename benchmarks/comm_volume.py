@@ -1,13 +1,20 @@
-"""Communication-volume table: bits per device per iteration, per method.
+"""Communication-volume tables: per-iteration bits/bytes per method.
 
-Equal-overhead pairs used throughout Sec. V:
-  COCO-EF(Sign)  == Unbiased(Sign)   (1 bit/coord + scales)
-  COCO-EF(TopK)  == Unbiased(RandK)  (K values + K indices)
-vs the uncompressed SGC baseline (32 bits/coord).
+Table 1 — the paper's D=100 linreg accounting (Sec. V):
+  Equal-overhead pairs used throughout:
+    COCO-EF(Sign)  == Unbiased(Sign)   (1 bit/coord + scales)
+    COCO-EF(TopK)  == Unbiased(RandK)  (K values + K indices)
+  vs the uncompressed SGC baseline (32 bits/coord).
+
+Table 2 — phase-1 wire bytes/step/rank at production model scale, straight
+from the WireFormat layer that the coded collective actually transmits
+(`repro.core.collectives`): sign vs block top-K vs dense.
 """
 from repro.core import compression as C
+from repro.core.collectives import DenseWire, SignWire, SparseWire
 
-D = 100  # paper's linreg dimensionality
+D = 100          # paper's linreg dimensionality
+N_MODEL = 1 << 22  # 4M-coord flat gradient slice (production scale)
 
 
 def run():
@@ -22,6 +29,27 @@ def run():
     return rows
 
 
+def run_wires(n: int = N_MODEL):
+    """(name, bytes/step/rank, compression vs dense f32) per wire format."""
+    wires = [
+        ("sign g=512", SignWire(group_size=512)),
+        ("topk 8/512 f32", SparseWire(k_per_block=8, block_size=512)),
+        ("topk 8/512 bf16", SparseWire(k_per_block=8, block_size=512,
+                                       value_dtype="bfloat16")),
+        ("topk 32/512 f32", SparseWire(k_per_block=32, block_size=512)),
+        ("dense bf16", DenseWire(value_dtype="bfloat16")),
+        ("dense f32", DenseWire()),
+    ]
+    dense = DenseWire().wire_bytes(n)
+    return [(name, w.wire_bytes(n), dense / w.wire_bytes(n))
+            for name, w in wires]
+
+
 if __name__ == "__main__":
+    print(f"-- paper accounting (D={D}) --")
     for name, bits, ratio in run():
         print(f"{name:24s} bits/iter/device={bits:6d}  compression x{ratio:.1f}")
+    print(f"\n-- wire formats on the coded collective (n={N_MODEL}) --")
+    for name, nbytes, ratio in run_wires():
+        print(f"{name:18s} bytes/step/rank={nbytes:10d}  vs dense f32 "
+              f"x{ratio:5.1f}")

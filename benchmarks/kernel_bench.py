@@ -26,15 +26,20 @@ def run():
     pack = jax.jit(lambda v: ref.sign_pack_ref(v, g))
     fused = jax.jit(lambda a, b: ref.ef_sign_fused_ref(a, b, 0.01, 1.0, g))
     topk = jax.jit(lambda v: ref.block_topk_ref(v, 16, 512))
+    tpack = jax.jit(lambda v: ref.topk_pack_ref(v, 16, 512))
 
     w, s = pack(x)
     unpack = jax.jit(lambda ww, ss: ref.sign_unpack_ref(ww, ss, g))
+    ti, tv, ts = tpack(x)
+    tunpack = jax.jit(lambda a, b, c: ref.topk_unpack_ref(a, b, c, 512))
 
     rows = [
         ("sign_pack_4M", _time(pack, x), n * 4 / 8 / 1.0),   # bytes ratio
         ("sign_unpack_4M", _time(unpack, w, s), 0),
         ("ef_fused_4M", _time(fused, x, e), 0),
         ("block_topk_4M", _time(topk, x), 0),
+        ("topk_pack_4M", _time(tpack, x), 0),
+        ("topk_unpack_4M", _time(tunpack, ti, tv, ts), 0),
     ]
     return rows
 

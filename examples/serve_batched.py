@@ -25,8 +25,8 @@ def main():
     ap.add_argument("--new-tokens", type=int, default=8)
     args = ap.parse_args()
 
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.compat import make_mesh
+    mesh = make_mesh((4, 2), ("data", "model"))
     # cache sized for prompt + generation
     total = args.prompt_len + args.new_tokens
     shape = ShapeCfg("decode", seq_len=total, global_batch=args.batch)

@@ -28,18 +28,26 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="olmoe-1b-7b")
     ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--compressor", default="sign",
+                    choices=["sign", "block_topk", "topk", "identity"],
+                    help="phase-1 wire compressor (WireFormat selection)")
+    ap.add_argument("--num-buckets", type=int, default=1,
+                    help="flat-vector buckets for comm overlap")
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_e2e_ckpt")
     args = ap.parse_args()
 
-    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    from repro.compat import make_mesh
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
     shape = ShapeCfg("train", seq_len=64, global_batch=16)
     spec = REGISTRY[args.arch]
     spec = dataclasses.replace(
-        spec, coding=dataclasses.replace(spec.coding, group_size=32))
+        spec, coding=dataclasses.replace(spec.coding, group_size=32,
+                                         block_size=64, k_per_block=8))
     setup = build_train_setup(spec, mesh, shape,
-                              TrainRun(base_lr=5e-3, mode="cocoef"),
+                              TrainRun(base_lr=5e-3, mode="cocoef",
+                                       compressor=args.compressor,
+                                       num_buckets=args.num_buckets),
                               smoke=True)
     print(f"arch={args.arch} coding ranks={setup.n_code} "
           f"per-rank batch={setup.b_loc} local flat={setup.flat_pad}")

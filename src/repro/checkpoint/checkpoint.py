@@ -1,8 +1,10 @@
 """Fault-tolerant checkpointing for (params, EF state, optimizer, cursor).
 
-Format: one zstd-compressed msgpack-framed .npz-style file per step,
-written atomically (tmp + rename) so a crash mid-write never corrupts the
-latest checkpoint.  The data cursor is just the step counter (the synthetic
+Format: one compressed msgpack-framed .npz-style file per step (zstd when
+the optional `zstandard` package is installed, raw bytes otherwise — the
+header records the codec so files restore across environments), written
+atomically (tmp + rename) so a crash mid-write never corrupts the latest
+checkpoint.  The data cursor is just the step counter (the synthetic
 pipeline is counter-addressable, repro.data.pipeline), so restart resumes
 exactly.
 
@@ -24,9 +26,33 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
-import zstandard
+
+try:  # optional: fall back to an uncompressed payload codec without it
+    import zstandard
+except ModuleNotFoundError:
+    zstandard = None
 
 MAGIC = b"RPR1"
+
+
+def _encode_payload(payload: bytes) -> tuple:
+    """-> (codec_name, wire_bytes).  zstd when available, raw otherwise."""
+    if zstandard is not None:
+        return "zstd", zstandard.ZstdCompressor(level=3).compress(payload)
+    return "raw", payload
+
+
+def _decode_payload(codec: str, blob: bytes) -> bytes:
+    if codec == "raw":
+        return blob
+    if codec == "zstd":
+        if zstandard is None:
+            raise ModuleNotFoundError(
+                "checkpoint was written with the zstd codec but the "
+                "'zstandard' package is not installed; pip install zstandard "
+                "to restore it")
+        return zstandard.ZstdDecompressor().decompress(blob)
+    raise ValueError(f"unknown checkpoint codec {codec!r}")
 
 
 def _tree_to_bufs(tree) -> Tuple[Dict, list]:
@@ -54,10 +80,10 @@ def save_checkpoint(directory: str | Path, step: int, state: Dict[str, Any],
             meta["offsets"].append(sum(len(x) for x in blobs))
             blobs.append(b)
         trees[name] = meta
-    header = json.dumps({"step": int(step), "trees": trees,
-                         "extra": extra or {}}).encode()
     payload = b"".join(blobs)
-    comp = zstandard.ZstdCompressor(level=3).compress(payload)
+    codec, comp = _encode_payload(payload)
+    header = json.dumps({"step": int(step), "trees": trees,
+                         "codec": codec, "extra": extra or {}}).encode()
     final = directory / f"ckpt_{step:010d}.rpr"
     with tempfile.NamedTemporaryFile(dir=directory, delete=False) as tmp:
         tmp.write(MAGIC)
@@ -95,8 +121,8 @@ def restore_checkpoint(directory: str | Path, templates: Dict[str, Any],
     assert raw[:4] == MAGIC, "corrupt checkpoint"
     hlen, clen = struct.unpack("<QQ", raw[4:20])
     header = json.loads(raw[20:20 + hlen])
-    payload = zstandard.ZstdDecompressor().decompress(
-        raw[20 + hlen:20 + hlen + clen])
+    payload = _decode_payload(header.get("codec", "zstd"),
+                              raw[20 + hlen:20 + hlen + clen])
 
     out = {}
     for name, template in templates.items():

@@ -1,0 +1,47 @@
+"""Version-tolerance shims for the jax APIs this repo leans on.
+
+The production target is current jax (jax.shard_map, lax.axis_size,
+jax.make_mesh(..., axis_types=...)); CI and the CPU container may run an
+older release (>= 0.4.35) where those spell differently.  Everything in the
+repo that touches one of these APIs goes through this module so the
+difference lives in exactly one place.
+"""
+from __future__ import annotations
+
+import jax
+from jax import lax
+
+__all__ = ["axis_size", "shard_map", "make_mesh"]
+
+
+def axis_size(name: str) -> int:
+    """Static size of a mapped mesh axis (usable inside shard_map)."""
+    if hasattr(lax, "axis_size"):
+        return lax.axis_size(name)
+    # psum of a Python int is folded statically to the axis size
+    return lax.psum(1, name)
+
+
+def shard_map(f, mesh, in_specs, out_specs, axis_names=None, check=True):
+    """`jax.shard_map` with every mesh axis manual; `check` maps onto
+    check_vma (new) / check_rep (old) and defaults to True like
+    jax.shard_map itself (launch/train.py opts out explicitly).
+    `axis_names` defaults to all axes — callers here never use
+    partial-manual mode."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs,
+                             axis_names=axis_names or set(mesh.axis_names),
+                             check_vma=check)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check)
+
+
+def make_mesh(axis_shapes, axis_names):
+    """`jax.make_mesh` with explicit Auto axis types where supported."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            axis_shapes, axis_names,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axis_names))
+    return jax.make_mesh(axis_shapes, axis_names)

@@ -41,6 +41,13 @@ class CodingPlan:
     redundancy: d_k — how many coding ranks hold each data subset.
     straggler_p: Bernoulli straggler probability baked into encode weights.
     group_size: sign-quantization group.
+    compressor: phase-1 wire compressor (sign | block_topk | topk |
+      identity); selects the WireFormat of repro.core.collectives.
+    k_per_block / block_size: block top-K sparsification parameters
+      (compressor="block_topk").
+    topk_k: global top-K budget (compressor="topk"); split evenly across
+      all_to_all chunks and comm-overlap buckets.
+    wire_dtype: sparse-value / dense-payload dtype on the wire.
     fsdp: shard parameters over the 'data' axis too (memory-bound archs);
       when fsdp is on, coding runs over 'pod' only (DESIGN.md Sec. 5).
     """
@@ -49,6 +56,11 @@ class CodingPlan:
     redundancy: int = 2
     straggler_p: float = 0.1
     group_size: int = 512
+    compressor: str = "sign"
+    k_per_block: int = 8
+    block_size: int = 256
+    topk_k: int = 64
+    wire_dtype: str = "float32"
     fsdp: bool = False
 
 

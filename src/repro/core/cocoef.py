@@ -12,8 +12,10 @@ coding ranks, distinct across tp shards) plus the new error state.
 
 The math is Algorithm 1 exactly:
   acc  = gamma * g + e
-  c    = C(acc)            (sign wire format; pack once, unpack locally)
-  ghat = sum_i mask_i c_i  (two-phase wire-compressed collective)
+  c    = wire.roundtrip(acc)  (the wire IS the compressor: SignWire <->
+                               grouped sign, SparseWire <-> block top-K,
+                               DenseWire <-> identity; see collectives.py)
+  ghat = sum_i mask_i c_i     (two-phase wire-compressed collective)
   e'   = mask ? acc - c : e
 
 `mode` selects the paper's method or the baselines for A/B roofline runs:
@@ -31,8 +33,10 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from .collectives import (CodingCollectiveConfig, dense_allreduce, sign_pack,
-                          sign_unpack, two_phase_sign_allreduce)
+from repro.compat import axis_size
+from .collectives import (CodingCollectiveConfig, DenseWire, SignWire,
+                          SparseWire, WireFormat, dense_allreduce,
+                          two_phase_coded_allreduce)
 
 __all__ = ["CocoEFConfig", "FlatMeta", "flatten_local", "unflatten_local",
            "padded_size", "cocoef_update", "coding_rank_index"]
@@ -44,6 +48,11 @@ class CocoEFConfig:
     group_size: int = 512
     straggler_p: float = 0.0
     mode: str = "cocoef"              # cocoef | coco | dense
+    compressor: str = "sign"          # sign | block_topk | topk | identity
+    topk_k: int = 64                  # global-K budget (compressor="topk")
+    k_per_block: int = 8              # kept coords/block (compressor="block_topk")
+    block_size: int = 256             # sparsification block (compressor="block_topk")
+    wire_dtype: str = "float32"       # sparse values / dense payload dtype
     ef_dtype: str = "float32"         # error-vector storage dtype
     phase2_dtype: str = "float32"     # f32 = paper-faithful broadcast
     phase2_sign: bool = False         # beyond-paper compressed broadcast
@@ -55,6 +64,36 @@ class CocoEFConfig:
             group_size=self.group_size,
             phase2_dtype=jnp.dtype(self.phase2_dtype),
             phase2_sign=self.phase2_sign)
+
+    def wire_format(self, n: int, nd: int) -> WireFormat:
+        """Wire format for one bucket of `n` coords over `nd` chunks."""
+        if self.compressor == "sign":
+            return SignWire(group_size=self.group_size)
+        if self.compressor == "block_topk":
+            return SparseWire(k_per_block=self.k_per_block,
+                              block_size=self.block_size,
+                              value_dtype=self.wire_dtype)
+        if self.compressor == "topk":
+            # global top-K realized as one block per all_to_all chunk with an
+            # equal per-chunk budget (fixed-shape payload; see
+            # collectives.wire_for_compressor).  topk_k is the GLOBAL budget,
+            # so it is split across nd chunks AND num_buckets.
+            block = n // nd
+            kb = -(-self.topk_k // (nd * self.num_buckets))
+            return SparseWire(k_per_block=min(block, kb),
+                              block_size=block, value_dtype=self.wire_dtype)
+        if self.compressor == "identity":
+            return DenseWire(value_dtype=self.wire_dtype)
+        raise ValueError(f"unknown compressor {self.compressor!r}")
+
+    @property
+    def pad_multiple(self) -> int:
+        """Per-bucket flat-size alignment (feeds `padded_size`): the sign
+        group always participates (phase-2 re-compression packs the chunk
+        with `group_size`), joined with the sparse block when active."""
+        if self.compressor == "block_topk":
+            return math.lcm(self.group_size, self.block_size)
+        return self.group_size
 
 
 # --------------------------------------------------------------------------
@@ -106,7 +145,7 @@ def coding_rank_index(coding_axes: Sequence[str]) -> jnp.ndarray:
     """Row-major linear index of this device among the coding ranks."""
     idx = jnp.zeros((), jnp.int32)
     for ax in coding_axes:
-        idx = idx * lax.axis_size(ax) + lax.axis_index(ax)
+        idx = idx * axis_size(ax) + lax.axis_index(ax)
     return idx
 
 
@@ -140,11 +179,14 @@ def cocoef_update(g_local: jnp.ndarray, e_local: jnp.ndarray,
     else:  # cocoef
         acc = gamma * g_local + e_local.astype(jnp.float32)
 
+    nd = axis_size(coll.chunk_axis)
     ghat_parts, c_parts = [], []
     for acc_b in _bucketed(acc, cfg.num_buckets):
-        words, scales = sign_pack(acc_b, cfg.group_size)
-        c_b = sign_unpack(words, scales, cfg.group_size)
-        ghat_parts.append(two_phase_sign_allreduce(c_b, coll, mask))
+        wire = cfg.wire_format(acc_b.shape[0], nd)
+        payload = wire.pack(acc_b)          # pack once; collective reuses it
+        c_b = wire.unpack(payload)
+        ghat_parts.append(two_phase_coded_allreduce(c_b, wire, coll, mask,
+                                                    payload=payload))
         c_parts.append(c_b)
     ghat = jnp.concatenate(ghat_parts)
     c = jnp.concatenate(c_parts)

@@ -4,11 +4,11 @@ The paper's device->server->device exchange maps onto a two-phase collective
 over the coding axes (DESIGN.md Sec. 2):
 
   phase 1 (device -> "server"):  each coding rank packs C(acc_i) into its
-     wire format (sign bits -> uint32 words + per-group f32 scales) and
-     `all_to_all`s chunk j to rank j; rank j decodes every sender's chunk,
-     applies the straggler mask of the *sender*, and sums.  This leg carries
-     the compressed payload -> ~26x fewer bytes than a dense f32 all-reduce
-     leg for group_size=512 sign quantization.
+     wire format and `all_to_all`s chunk j to rank j; rank j decodes every
+     sender's chunk, applies the straggler mask of the *sender*, and sums.
+     This leg carries the compressed payload -> ~26x fewer bytes than a
+     dense f32 all-reduce leg for group_size=512 sign quantization, and
+     ~21x for block top-K at k/B = 8/512.
   phase 2 ("server" -> device):  the aggregated dense chunk is `all_gather`ed
      back.  Paper-faithful mode sends f32 (the paper's server broadcast is
      uncompressed); `phase2_dtype=bf16` and `phase2_sign=True` are
@@ -18,24 +18,58 @@ When the coding runs over two mesh axes (e.g. ("pod", "data")) the phases are
 hierarchical: all_to_all within the minor axis, psum across the major axis on
 the decoded chunk, gather within the minor axis.
 
+WireFormat contract
+-------------------
+A `WireFormat` is a frozen dataclass describing how a flat f32 vector is
+serialized for the phase-1 leg.  Implementations provide:
+
+  pack(x)          (n,) f32 -> tuple of arrays (the payload).  Every payload
+                   leaf has leading dimension proportional to n, so chunking
+                   for the all_to_all is the generic reshape
+                   `leaf.reshape((nd, leaf.shape[0] // nd) + rest)`.
+  unpack(payload)  payload -> (n,) f32, the decompressed vector.  Must be
+                   vmap-safe (it is vmapped over senders on the decode side).
+  wire_bytes(n)    bytes on the wire for one rank's phase-1 payload.
+  check(n, nd)     raise ValueError unless n is compatible with this wire
+                   format and `nd` all_to_all chunks (pad upstream with
+                   `repro.core.cocoef.padded_size`).
+  alignment()      n must be a multiple of `nd * alignment()`.
+
+`roundtrip(x) = unpack(pack(x))` realizes the wire's compressor on the train
+path: SignWire <-> GroupedSign (lossless re-pack), SparseWire <-> BlockTopK
+(1-2 ulp from the per-block scale normalization), DenseWire <-> Identity.
+Roundtrips are idempotent, so the collective may pack an already-compressed
+vector without changing it (beyond ulp-level rescaling noise).
+
 Everything here runs inside a *fully manual* shard_map: inputs are the
 device-local flat gradient/error vectors.  The pure-jnp pack/unpack here are
-the reference implementations; `repro.kernels.sign_pack` provides the Pallas
-TPU kernels for the same wire format.
+the reference implementations; `repro.kernels.sign_pack` and
+`repro.kernels.topk_pack` provide the Pallas TPU kernels for the same wire
+formats.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.compat import axis_size
+
 __all__ = [
     "sign_pack",
     "sign_unpack",
+    "WireFormat",
+    "SignWire",
+    "SparseWire",
+    "DenseWire",
+    "get_wire",
+    "wire_for_compressor",
     "CodingCollectiveConfig",
+    "two_phase_coded_allreduce",
     "two_phase_sign_allreduce",
     "dense_allreduce",
     "wire_bytes_sign",
@@ -43,7 +77,7 @@ __all__ = [
 
 
 # --------------------------------------------------------------------------
-# wire format: sign bits + per-group scales
+# sign wire primitives (shared with kernels/ref.py semantics)
 # --------------------------------------------------------------------------
 
 def sign_pack(x: jnp.ndarray, group_size: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -80,6 +114,193 @@ def wire_bytes_sign(n: int, group_size: int) -> int:
 
 
 # --------------------------------------------------------------------------
+# wire formats
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class WireFormat:
+    """Base class; subclasses are frozen dataclasses => valid static args."""
+
+    def pack(self, x: jnp.ndarray) -> Tuple[jnp.ndarray, ...]:
+        raise NotImplementedError
+
+    def unpack(self, payload: Tuple[jnp.ndarray, ...]) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def wire_bytes(self, n: int) -> int:
+        raise NotImplementedError
+
+    def alignment(self) -> int:
+        raise NotImplementedError
+
+    def check(self, n: int, nd: int = 1) -> None:
+        a = self.alignment()
+        if n <= 0 or n % (nd * a):
+            raise ValueError(
+                f"{type(self).__name__}: flat size {n} must be a positive "
+                f"multiple of chunk_count*alignment = {nd}*{a}; pad upstream")
+
+    def roundtrip(self, x: jnp.ndarray) -> jnp.ndarray:
+        """The wire's compressor: what the receivers reconstruct."""
+        return self.unpack(self.pack(x))
+
+
+@dataclasses.dataclass(frozen=True)
+class SignWire(WireFormat):
+    """Grouped sign quantization on the wire: 1 bit/coord + f32 scale/group.
+
+    Exactly representable inputs (sign(x)*scale_group, incl. StochasticSign
+    outputs) roundtrip bit-for-bit; sign(±0) := +1.
+    """
+
+    group_size: int = 512
+
+    def pack(self, x):
+        return sign_pack(x, self.group_size)
+
+    def unpack(self, payload):
+        words, scales = payload
+        return sign_unpack(words, scales, self.group_size)
+
+    def wire_bytes(self, n):
+        return wire_bytes_sign(n, self.group_size)
+
+    def alignment(self):
+        return self.group_size
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseWire(WireFormat):
+    """Block-local top-K on the wire (Ye & Abbe 2018 comm-efficient coding).
+
+    Payload per block of `block_size` coords:
+      indices : (nblocks, k) uint16 (uint32 when block_size > 65536) —
+                in-block positions of the k largest-|.| entries, in
+                decreasing-magnitude order, first occurrence wins ties
+                (matches `kernels.topk_block` / `lax.top_k`).
+      values  : (nblocks, k) value_dtype — kept entries normalized by the
+                block scale (|v| <= 1), enabling narrow value dtypes.
+      scales  : (nblocks,) f32 — per-block max-|.| (1.0 for all-zero blocks).
+
+    roundtrip == BlockTopK.apply up to 1-2 ulp of the scale normalization;
+    delta = 1 - k/block_size (Assumption 5).
+    """
+
+    k_per_block: int = 8
+    block_size: int = 256
+    value_dtype: str = "float32"
+
+    def __post_init__(self):
+        if not (0 < self.k_per_block <= self.block_size):
+            raise ValueError(f"need 0 < k_per_block <= block_size, got "
+                             f"{self.k_per_block} / {self.block_size}")
+
+    @property
+    def index_dtype(self):
+        return jnp.uint16 if self.block_size <= (1 << 16) else jnp.uint32
+
+    def pack(self, x):
+        xf = x.astype(jnp.float32)
+        blocks = xf.reshape(-1, self.block_size)
+        mag = jnp.abs(blocks)
+        _, idx = lax.top_k(mag, self.k_per_block)           # (nb, k)
+        sv = jnp.take_along_axis(blocks, idx, axis=-1)      # signed values
+        scale = jnp.max(mag, axis=-1)                       # (nb,)
+        safe = jnp.where(scale == 0, 1.0, scale)
+        values = (sv / safe[:, None]).astype(jnp.dtype(self.value_dtype))
+        return idx.astype(self.index_dtype), values, safe
+
+    def unpack(self, payload):
+        idx, values, scales = payload
+        nb, k = idx.shape
+        n = nb * self.block_size
+        sv = values.astype(jnp.float32) * scales[:, None]
+        base = jnp.arange(nb, dtype=jnp.int32)[:, None] * self.block_size
+        flat_idx = (base + idx.astype(jnp.int32)).reshape(-1)
+        return jnp.zeros((n,), jnp.float32).at[flat_idx].set(sv.reshape(-1))
+
+    def wire_bytes(self, n):
+        nb = n // self.block_size
+        idx_b = 2 if self.block_size <= (1 << 16) else 4
+        val_b = jnp.dtype(self.value_dtype).itemsize
+        return nb * (self.k_per_block * (idx_b + val_b) + 4)  # + f32 scale
+
+    def alignment(self):
+        return self.block_size
+
+
+@dataclasses.dataclass(frozen=True)
+class DenseWire(WireFormat):
+    """Uncompressed fallback: the flat vector, optionally narrowed to bf16.
+
+    f32 roundtrips bit-exact (the SGC [31] baseline wire); bf16 is the
+    beyond-paper half-width dense wire.
+    """
+
+    value_dtype: str = "float32"
+
+    def pack(self, x):
+        return (x.astype(jnp.dtype(self.value_dtype)),)
+
+    def unpack(self, payload):
+        return payload[0].astype(jnp.float32)
+
+    def wire_bytes(self, n):
+        return n * jnp.dtype(self.value_dtype).itemsize
+
+    def alignment(self):
+        return 1
+
+
+_WIRE_REGISTRY = {
+    # NOTE: no "topk" alias — the global-top-K spelling of
+    # CocoEFConfig.compressor needs (n, nd) to size its per-chunk blocks;
+    # use wire_for_compressor / CocoEFConfig.wire_format for that.
+    "sign": SignWire,
+    "sparse": SparseWire,
+    "dense": DenseWire,
+}
+
+
+def get_wire(name: str, **kwargs) -> WireFormat:
+    if name not in _WIRE_REGISTRY:
+        raise KeyError(f"unknown wire format {name!r}; "
+                       f"have {sorted(_WIRE_REGISTRY)}")
+    return _WIRE_REGISTRY[name](**kwargs)
+
+
+def wire_for_compressor(comp, n: int, nd: int = 1) -> WireFormat:
+    """Map a `repro.core.compression.Compressor` onto the wire format that
+    carries it on the coded collective (`n` = flat size, `nd` = chunk count).
+
+    Global TopK / RandK have no fixed-shape per-chunk payload, so they ride
+    the sparse wire with one block per all_to_all chunk and an equal
+    per-chunk budget ceil(k/nd) (RandK additionally gets 2x capacity slack;
+    coords beyond the budget in one chunk are dropped — documented
+    approximation, still a contraction).
+    """
+    from .compression import (BlockTopK, GroupedSign, Identity, RandK,
+                              StochasticSign, TopK)
+    if isinstance(comp, (GroupedSign, StochasticSign)):
+        g = comp.group_size if comp.group_size > 0 else n
+        return SignWire(group_size=g)
+    if isinstance(comp, BlockTopK):
+        return SparseWire(k_per_block=comp.k_per_block,
+                          block_size=comp.block_size)
+    if isinstance(comp, TopK):
+        block = n // nd
+        return SparseWire(k_per_block=min(block, math.ceil(comp.k / nd)),
+                          block_size=block)
+    if isinstance(comp, RandK):
+        block = n // nd
+        return SparseWire(k_per_block=min(block, 2 * math.ceil(comp.k / nd)),
+                          block_size=block)
+    if isinstance(comp, Identity):
+        return DenseWire()
+    raise TypeError(f"no wire format for compressor {type(comp).__name__}")
+
+
+# --------------------------------------------------------------------------
 # collective aggregation
 # --------------------------------------------------------------------------
 
@@ -90,7 +311,8 @@ class CodingCollectiveConfig:
     coding_axes: mesh axis names the COCO-EF 'devices' live on.  The last
       axis is the all_to_all/gather (chunking) axis; any earlier axes are
       reduced hierarchically with a dense psum of the (small) decoded chunk.
-    group_size: sign-quantization group (multiple of 32).
+    group_size: sign-quantization group (multiple of 32); also the phase-2
+      re-compression group when phase2_sign is on.
     phase2_dtype: dtype of the aggregated update broadcast (f32 = paper).
     """
 
@@ -109,53 +331,53 @@ class CodingCollectiveConfig:
 
 
 def _chunk_count(axis: str) -> int:
-    return lax.axis_size(axis)
+    return axis_size(axis)
 
 
-def two_phase_sign_allreduce(
+def two_phase_coded_allreduce(
     c_local: jnp.ndarray,
+    wire: WireFormat,
     cfg: CodingCollectiveConfig,
     mask: jnp.ndarray,
+    payload: Optional[Tuple[jnp.ndarray, ...]] = None,
 ) -> jnp.ndarray:
     """Compute  sum_i mask_i * c_i  across the coding ranks, transmitting
-    phase 1 in the packed sign wire format.
+    phase 1 in `wire`'s packed format.
 
     c_local: (n,) this rank's *decompressed* compressed vector C(acc_i).
-      Because sign quantization is exactly representable by (bits, scales),
-      pack->unpack is lossless for such inputs and the result equals the
-      dense masked psum bit-for-bit (tested).
+      When c_local is exactly representable by the wire (it is the output of
+      `wire.roundtrip`), pack->unpack is lossless up to ulp-level rescaling
+      and the result equals the dense masked psum (bit-for-bit for
+      SignWire/DenseWire(f32); within 1-2 ulp for SparseWire — tested).
     mask: (n_coding_total,) straggler indicators, flattened over coding axes
       in row-major (outer..., chunk) order — identical on every rank.
+    payload: optional pre-packed wire payload of c_local (hot-path callers
+      that already packed to obtain c_local avoid a second pack here).
     Returns: (n,) aggregated ghat, identical on every coding rank.
     """
     n = c_local.shape[0]
     nd = _chunk_count(cfg.chunk_axis)
-    if n % (nd * cfg.group_size):
-        raise ValueError(f"flat size {n} must be divisible by "
-                         f"chunk_count*group_size = {nd * cfg.group_size}")
+    wire.check(n, nd)
 
-    words, scales = sign_pack(c_local, cfg.group_size)
+    if payload is None:
+        payload = wire.pack(c_local)
 
     # ---- phase 1: all_to_all compressed chunks over the chunk axis -------
-    words_c = words.reshape(nd, -1)
-    scales_c = scales.reshape(nd, -1)
+    # generic chunking: every payload leaf's leading dim is proportional to n
+    chunked = tuple(p.reshape((nd, p.shape[0] // nd) + p.shape[1:])
+                    for p in payload)
     # row i of the result = sender i's chunk destined for this rank
-    words_r = lax.all_to_all(words_c, cfg.chunk_axis, split_axis=0,
-                             concat_axis=0, tiled=False)
-    scales_r = lax.all_to_all(scales_c, cfg.chunk_axis, split_axis=0,
-                              concat_axis=0, tiled=False)
+    recv = tuple(lax.all_to_all(p, cfg.chunk_axis, split_axis=0,
+                                concat_axis=0, tiled=False) for p in chunked)
 
     # sender identity: (outer..., chunk-rank i); this rank's outer coords
     outer_idx = 0
     for ax in cfg.outer_axes:
-        outer_idx = outer_idx * lax.axis_size(ax) + lax.axis_index(ax)
+        outer_idx = outer_idx * axis_size(ax) + lax.axis_index(ax)
     sender_base = outer_idx * nd
     sender_mask = lax.dynamic_slice_in_dim(mask, sender_base, nd)  # (nd,)
 
-    def _decode(w_row, s_row):
-        return sign_unpack(w_row, s_row, cfg.group_size)
-
-    decoded = jax.vmap(_decode)(words_r, scales_r)          # (nd, n/nd)
+    decoded = jax.vmap(lambda *p: wire.unpack(p))(*recv)      # (nd, n/nd)
     chunk_sum = (sender_mask[:, None] * decoded).sum(axis=0)  # (n/nd,)
 
     # ---- hierarchical reduction over outer coding axes (dense, small) ----
@@ -171,10 +393,20 @@ def two_phase_sign_allreduce(
         s2g = lax.all_gather(s2, cfg.chunk_axis, axis=0, tiled=True)
         ghat = sign_unpack(w2g, s2g, cfg.group_size)
     else:
-        payload = chunk_sum.astype(cfg.phase2_dtype)
-        ghat = lax.all_gather(payload, cfg.chunk_axis, axis=0,
+        payload2 = chunk_sum.astype(cfg.phase2_dtype)
+        ghat = lax.all_gather(payload2, cfg.chunk_axis, axis=0,
                               tiled=True).astype(jnp.float32)
     return ghat
+
+
+def two_phase_sign_allreduce(
+    c_local: jnp.ndarray,
+    cfg: CodingCollectiveConfig,
+    mask: jnp.ndarray,
+) -> jnp.ndarray:
+    """Sign-wire specialization of `two_phase_coded_allreduce` (seed API)."""
+    return two_phase_coded_allreduce(
+        c_local, SignWire(group_size=cfg.group_size), cfg, mask)
 
 
 def dense_allreduce(c_local: jnp.ndarray, cfg: CodingCollectiveConfig,
@@ -183,7 +415,7 @@ def dense_allreduce(c_local: jnp.ndarray, cfg: CodingCollectiveConfig,
     (stochastic gradient coding [31] / reference semantics for tests)."""
     idx = 0
     for ax in cfg.coding_axes:
-        idx = idx * lax.axis_size(ax) + lax.axis_index(ax)
+        idx = idx * axis_size(ax) + lax.axis_index(ax)
     my_mask = lax.dynamic_index_in_dim(mask, idx, keepdims=False)
     out = my_mask * c_local
     for ax in cfg.coding_axes:

@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import jax
 
-from . import ref, sign_pack as sp, topk_block as tb
+from . import ref, sign_pack as sp, topk_block as tb, topk_pack as tp
 
 
 def default_use_pallas() -> bool:
@@ -49,3 +49,26 @@ def block_topk(x, k: int, block_size: int, use_pallas=None):
         return tb.block_topk(x, k, block_size,
                              interpret=jax.default_backend() != "tpu")
     return ref.block_topk_ref(x, k, block_size)
+
+
+def topk_pack(x, k: int, block_size: int, use_pallas=None):
+    use = default_use_pallas() if use_pallas is None else use_pallas
+    if use:
+        return tp.topk_pack(x, k, block_size,
+                            interpret=jax.default_backend() != "tpu")
+    return ref.topk_pack_ref(x, k, block_size)
+
+
+def topk_unpack(indices, values, scales, block_size: int):
+    return ref.topk_unpack_ref(indices, values, scales, block_size)
+
+
+def topk_decode_reduce(indices, values, scales, mask, block_size: int,
+                       use_pallas=None):
+    use = default_use_pallas() if use_pallas is None else use_pallas
+    if use:
+        return tp.topk_decode_reduce(indices, values, scales, mask,
+                                     block_size,
+                                     interpret=jax.default_backend() != "tpu")
+    return ref.topk_decode_reduce_ref(indices, values, scales, mask,
+                                      block_size)

@@ -57,6 +57,44 @@ def sign_decode_reduce_ref(words: jnp.ndarray, scales: jnp.ndarray,
     return (mask[:, None] * dec).sum(0)
 
 
+def topk_pack_ref(x: jnp.ndarray, k: int, block_size: int
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Sparse (block top-K) wire pack — repro.core.collectives.SparseWire.
+
+    x: (n,) -> (indices (n/B, k) i32 in decreasing-|.| order (first
+    occurrence wins ties, matching lax.top_k / the Pallas kernel),
+    values (n/B, k) f32 normalized by the block scale, scales (n/B,) f32 =
+    per-block max |x| with 1.0 substituted for all-zero blocks)."""
+    blocks = x.astype(jnp.float32).reshape(-1, block_size)
+    mag = jnp.abs(blocks)
+    _, idx = jax.lax.top_k(mag, k)
+    sv = jnp.take_along_axis(blocks, idx, axis=-1)
+    scale = jnp.max(mag, axis=-1)
+    safe = jnp.where(scale == 0, 1.0, scale)
+    return idx.astype(jnp.int32), sv / safe[:, None], safe
+
+
+def topk_unpack_ref(indices: jnp.ndarray, values: jnp.ndarray,
+                    scales: jnp.ndarray, block_size: int) -> jnp.ndarray:
+    """Inverse of topk_pack_ref: scatter the kept entries back, flat (n,)."""
+    nb = indices.shape[0]
+    sv = values.astype(jnp.float32) * scales[:, None]
+    base = jnp.arange(nb, dtype=jnp.int32)[:, None] * block_size
+    flat_idx = (base + indices.astype(jnp.int32)).reshape(-1)
+    return jnp.zeros((nb * block_size,), jnp.float32
+                     ).at[flat_idx].set(sv.reshape(-1))
+
+
+def topk_decode_reduce_ref(indices: jnp.ndarray, values: jnp.ndarray,
+                           scales: jnp.ndarray, mask: jnp.ndarray,
+                           block_size: int) -> jnp.ndarray:
+    """Server-side sparse decode+aggregate: indices/values (N, n/B, k),
+    scales (N, n/B), mask (N,) -> sum_i mask_i * unpack(payload_i)  (n,)."""
+    dec = jax.vmap(lambda i, v, s: topk_unpack_ref(i, v, s, block_size)
+                   )(indices, values, scales)
+    return (mask[:, None] * dec).sum(0)
+
+
 def block_topk_ref(x: jnp.ndarray, k: int, block_size: int) -> jnp.ndarray:
     """Block-local top-k sparsification (repro.core.compression.BlockTopK):
     keep the k largest-|.| entries of each contiguous block."""

@@ -1,0 +1,142 @@
+"""Pallas TPU kernels for the sparse (block top-K) wire format.
+
+Mirrors kernels/sign_pack.py for the SparseWire of
+`repro.core.collectives`: per contiguous block of `block_size` coords the
+wire carries the k largest-|.| entries as (in-block indices, values
+normalized by the per-block scale, the f32 scale).  Selection runs k rounds
+of (row-max |x| over unselected, mark argmax) — pure VPU work, no sort, k is
+small (4-32); tie-breaking matches kernels/ref.topk_pack_ref (lax.top_k:
+first occurrence wins).
+
+Tiling: the flat vector is processed as (rows of R_BLK blocks) x
+(block_size lanes); block_size is a multiple of 128 in production so every
+BlockSpec is VPU aligned:
+
+  x block       (R_BLK, block_size)  f32  VMEM
+  indices block (R_BLK, k)           i32  VMEM
+  values block  (R_BLK, k)           f32  VMEM
+  scales block  (R_BLK, 1)           f32  VMEM
+
+The narrow wire dtypes (uint16 indices, bf16 values) are cast OUTSIDE the
+kernel by SparseWire.pack — Mosaic keeps 32-bit lanes internally.
+
+On this CPU container the kernels run with interpret=True (pure-JAX
+semantics) and are validated against kernels/ref.py; on real TPU the same
+pallas_call lowers to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+R_BLK = 8  # blocks (rows) per grid step
+
+
+def _select_topk(x, k: int):
+    """x: (R, B) f32 -> (idx (R, k) i32, sval (R, k) f32, scale (R, 1) f32).
+
+    Indices in decreasing-magnitude order, first occurrence wins ties."""
+    B = x.shape[-1]
+    mag = jnp.abs(x)
+    pos = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+    scale = jnp.max(mag, axis=-1, keepdims=True)               # (R, 1)
+    avail = jnp.ones(x.shape, jnp.bool_)
+    idx_cols, val_cols = [], []
+    for _ in range(k):                                         # static rounds
+        m = jnp.where(avail, mag, -1.0)
+        row_max = jnp.max(m, axis=-1, keepdims=True)
+        is_max = (m == row_max) & avail
+        first = jnp.min(jnp.where(is_max, pos, B), axis=-1, keepdims=True)
+        sel = pos == first
+        idx_cols.append(first.astype(jnp.int32))               # (R, 1)
+        val_cols.append(jnp.sum(jnp.where(sel, x, 0.0), axis=-1,
+                                keepdims=True))                # (R, 1)
+        avail = avail & ~sel
+    return (jnp.concatenate(idx_cols, axis=-1),
+            jnp.concatenate(val_cols, axis=-1), scale)
+
+
+def _topk_pack_kernel(x_ref, idx_ref, val_ref, scale_ref, *, k: int):
+    x = x_ref[...].astype(jnp.float32)
+    idx, sval, scale = _select_topk(x, k)
+    safe = jnp.where(scale == 0, 1.0, scale)
+    idx_ref[...] = idx
+    val_ref[...] = sval / safe
+    scale_ref[...] = safe
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_size", "interpret"))
+def topk_pack(x: jnp.ndarray, k: int, block_size: int, interpret: bool = True
+              ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """x: (n,) f32, n % (R_BLK * block_size) == 0 ->
+    (indices (n/B, k) i32, values (n/B, k) f32, scales (n/B,) f32)."""
+    n = x.shape[0]
+    rows = n // block_size
+    if n % (R_BLK * block_size):
+        raise ValueError(f"topk_pack needs n % (R_BLK*block_size) == 0, got "
+                         f"n={n}, R_BLK={R_BLK}, block_size={block_size}")
+    grid = (rows // R_BLK,)
+    idx, val, scale = pl.pallas_call(
+        functools.partial(_topk_pack_kernel, k=k),
+        grid=grid,
+        in_specs=[pl.BlockSpec((R_BLK, block_size), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((R_BLK, k), lambda i: (i, 0)),
+            pl.BlockSpec((R_BLK, k), lambda i: (i, 0)),
+            pl.BlockSpec((R_BLK, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, k), jnp.int32),
+            jax.ShapeDtypeStruct((rows, k), jnp.float32),
+            jax.ShapeDtypeStruct((rows, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x.reshape(rows, block_size))
+    return idx, val, scale.reshape(-1)
+
+
+def _topk_decode_reduce_kernel(idx_ref, val_ref, scale_ref, mask_ref, out_ref,
+                               *, k: int, n_senders: int):
+    pos = jax.lax.broadcasted_iota(jnp.int32, out_ref.shape, 1)  # (R, B)
+    acc = jnp.zeros(out_ref.shape, jnp.float32)
+    for i in range(n_senders):                                   # static loop
+        sv = val_ref[i] * scale_ref[i]                           # (R, k)
+        dense = jnp.zeros(out_ref.shape, jnp.float32)
+        for r in range(k):                                       # static loop
+            dense = dense + jnp.where(pos == idx_ref[i][:, r:r + 1],
+                                      sv[:, r:r + 1], 0.0)
+        acc = acc + mask_ref[i] * dense
+    out_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("block_size", "interpret"))
+def topk_decode_reduce(indices: jnp.ndarray, values: jnp.ndarray,
+                       scales: jnp.ndarray, mask: jnp.ndarray,
+                       block_size: int, interpret: bool = True) -> jnp.ndarray:
+    """Server-side sparse decode + masked aggregate.
+    indices: (N, rows, k) i32; values: (N, rows, k) f32;
+    scales: (N, rows) f32; mask: (N,) f32 -> (rows * block_size,)."""
+    N, rows, k = indices.shape
+    if rows % R_BLK:
+        raise ValueError(f"topk_decode_reduce needs rows % R_BLK == 0, got "
+                         f"rows={rows}, R_BLK={R_BLK}")
+    grid = (rows // R_BLK,)
+    out = pl.pallas_call(
+        functools.partial(_topk_decode_reduce_kernel, k=k, n_senders=N),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((N, R_BLK, k), lambda i: (0, i, 0)),
+            pl.BlockSpec((N, R_BLK, k), lambda i: (0, i, 0)),
+            pl.BlockSpec((N, R_BLK, 1), lambda i: (0, i, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec((R_BLK, block_size), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, block_size), jnp.float32),
+        interpret=interpret,
+    )(indices.astype(jnp.int32), values.astype(jnp.float32),
+      scales.reshape(N, rows, 1).astype(jnp.float32), mask)
+    return out.reshape(-1)

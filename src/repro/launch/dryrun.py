@@ -103,6 +103,8 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
                                     - mem.alias_size_in_bytes),
         }
         ca = compiled.cost_analysis() or {}
+        if isinstance(ca, (list, tuple)):   # older jax: one dict per device
+            ca = ca[0] if ca else {}
         rec["cost_xla_raw"] = {k: _jsonable(v) for k, v in ca.items()
                                if k in ("flops", "bytes accessed",
                                         "transcendentals")}

@@ -31,6 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.configs.common import ArchSpec, ShapeCfg
 from repro.core import coding
 from repro.core.cocoef import (CocoEFConfig, FlatMeta, cocoef_update,
@@ -50,6 +51,7 @@ class TrainRun:
     schedule: str = "constant"
     warmup: int = 0
     optimizer: OptimizerConfig = OptimizerConfig()
+    compressor: Optional[str] = None  # override spec.coding.compressor
     ef_dtype: str = "float32"
     phase2_dtype: str = "float32"
     phase2_sign: bool = False
@@ -136,22 +138,30 @@ def build_train_setup(spec: ArchSpec, mesh: Mesh, shape: ShapeCfg,
     gspecs = rules.grads_specs(pshapes, cfg, mesh, coding_axes, fsdp=fsdp)
     gshard = jax.tree.map(lambda s: NamedSharding(mesh, s), gspecs)
 
-    # device-local flat size (uniform across devices by construction)
+    # wire / compressor selection (run override beats the arch's plan)
     group = spec.coding.group_size
     nd_chunk = axis_sizes[coding_axes[-1]] if coding_axes else 1
+
+    cocoef_cfg = CocoEFConfig(
+        coding_axes=coding_axes if coding_axes else ("data",),
+        group_size=group, straggler_p=p_strag, mode=mode,
+        compressor=run.compressor or spec.coding.compressor,
+        topk_k=spec.coding.topk_k, k_per_block=spec.coding.k_per_block,
+        block_size=spec.coding.block_size, wire_dtype=spec.coding.wire_dtype,
+        ef_dtype=run.ef_dtype, phase2_dtype=run.phase2_dtype,
+        phase2_sign=run.phase2_sign, num_buckets=run.num_buckets)
+
+    # device-local flat size (uniform across devices by construction);
+    # padding alignment comes from the active wire format, not just the
+    # sign group (block top-K needs lcm(group, block))
     loc = _local_flat_size(pshapes, pspecs, mesh)
-    flat_pad = padded_size(loc, nd_chunk, group, run.num_buckets)
+    flat_pad = padded_size(loc, nd_chunk, cocoef_cfg.pad_multiple,
+                           run.num_buckets)
 
     mesh_shape = tuple(mesh.devices.shape)
     state_shape = mesh_shape + (flat_pad,)
     state_spec = P(*mesh.axis_names, None)
     state_sharding = NamedSharding(mesh, state_spec)
-
-    cocoef_cfg = CocoEFConfig(
-        coding_axes=coding_axes if coding_axes else ("data",),
-        group_size=group, straggler_p=p_strag, mode=mode,
-        ef_dtype=run.ef_dtype, phase2_dtype=run.phase2_dtype,
-        phase2_sign=run.phase2_sign, num_buckets=run.num_buckets)
 
     gamma_fn = lr_schedule(run.schedule, run.base_lr, run.warmup)
     n_opt = len(init_opt_state(run.optimizer, 1))
@@ -191,9 +201,11 @@ def build_train_setup(spec: ArchSpec, mesh: Mesh, shape: ShapeCfg,
         # local leaf blocks; grads leaves carry leading coding dims of size 1
         p_leaves = jax.tree.leaves(params)
         g_leaves = jax.tree.leaves(grads)
-        p_flat, p_meta = flatten_local(p_leaves, nd_chunk, group,
+        p_flat, p_meta = flatten_local(p_leaves, nd_chunk,
+                                       cocoef_cfg.pad_multiple,
                                        run.num_buckets)
-        g_flat, _ = flatten_local(g_leaves, nd_chunk, group, run.num_buckets)
+        g_flat, _ = flatten_local(g_leaves, nd_chunk, cocoef_cfg.pad_multiple,
+                                  run.num_buckets)
         e_loc = e.reshape(-1)
         opt_loc = tuple(o.reshape(-1) for o in opt)
 
@@ -216,13 +228,13 @@ def build_train_setup(spec: ArchSpec, mesh: Mesh, shape: ShapeCfg,
     params_in_specs = pspecs
     opt_specs = tuple(state_spec for _ in range(n_opt))
 
-    agg = jax.shard_map(
-        agg_body, mesh=mesh,
+    agg = compat.shard_map(
+        agg_body, mesh,
         in_specs=(params_in_specs, grads_in_specs, state_spec, opt_specs,
                   P(), P()),
         out_specs=(params_in_specs, state_spec, opt_specs,
                    P(*mesh.axis_names)),
-        axis_names=all_axes, check_vma=False)
+        axis_names=all_axes, check=False)
 
     # =======================================================================
     # full train step

@@ -1,0 +1,46 @@
+"""Optional-`hypothesis` shim for the property-based tests.
+
+When hypothesis is installed, this re-exports the real `given`, `settings`
+and `strategies` and the property tests run at full strength.  On a clean
+CPU box without it, a deterministic fallback keeps the same tests
+collectable and meaningful: each strategy degrades to a small fixed example
+list and `@given` becomes a `pytest.mark.parametrize` over cycled
+combinations — a handful of deterministic cases instead of randomized
+search, never a skip.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+    _FALLBACK_COMBOS = 6  # deterministic cases per property test
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            mid = (min_value + max_value) // 2
+            vals = [min_value, mid, max_value, min_value + 1 if
+                    min_value + 1 <= max_value else max_value]
+            return list(dict.fromkeys(vals))
+
+        @staticmethod
+        def sampled_from(elements):
+            return list(elements)
+
+    st = _Strategies()
+
+    def settings(**_kwargs):  # noqa: D103 — hypothesis-API stand-in
+        return lambda fn: fn
+
+    def given(**strategies):  # noqa: D103 — hypothesis-API stand-in
+        names = list(strategies)
+        pools = [list(strategies[n]) for n in names]
+        count = max(max(len(p) for p in pools), _FALLBACK_COMBOS)
+        combos = [tuple(pool[i % len(pool)] for pool in pools)
+                  for i in range(count)]
+        combos = list(dict.fromkeys(combos))
+        return pytest.mark.parametrize(",".join(names), combos)

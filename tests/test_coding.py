@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core import coding
 
@@ -16,6 +16,16 @@ def test_random_allocation_dk(seed, n, d):
     alloc = coding.random_allocation(seed, n, n, d)
     assert alloc.S.shape == (n, n)
     np.testing.assert_array_equal(alloc.d, min(d, n))
+
+
+def test_random_allocation_dk_fixed():
+    """Plain (non-hypothesis) pin of the allocation invariants so the case
+    runs identically with or without the optional property-test extras."""
+    for seed, n, d in [(0, 8, 1), (3, 20, 4), (7, 100, 6), (11, 8, 12)]:
+        alloc = coding.random_allocation(seed, n, n, d)
+        assert alloc.S.shape == (n, n)
+        np.testing.assert_array_equal(alloc.d, min(d, n))
+        assert int(np.asarray(alloc.S).sum()) == n * min(d, n)
 
 
 def test_cyclic_allocation_pairwise_balance():

@@ -19,6 +19,7 @@ def run_sub(body: str, devices: int = 8, timeout: int = 600):
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={devices}"
         import jax, jax.numpy as jnp, numpy as np
+        from repro.compat import make_mesh, shard_map
         {textwrap.indent(textwrap.dedent(body), '        ').strip()}
         print("SUBTEST-PASS")
     """)
@@ -37,8 +38,7 @@ def test_two_phase_equals_dense():
                                         dense_allreduce,
                                         CodingCollectiveConfig)
     from repro.core.compression import GroupedSign
-    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,)*3)
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
     cfg = CodingCollectiveConfig(coding_axes=("pod", "data"), group_size=32)
     mask = jnp.array([1., 0., 1., 1.])
 
@@ -47,9 +47,9 @@ def test_two_phase_equals_dense():
                 dense_allreduce(c, cfg, mask))
 
     n = 256
-    f = jax.shard_map(body, mesh=mesh, in_specs=P(("pod","data","model")),
-                      out_specs=(P(("pod","data","model")),)*2,
-                      axis_names={"pod","data","model"})
+    f = shard_map(body, mesh, in_specs=P(("pod","data","model")),
+                  out_specs=(P(("pod","data","model")),)*2,
+                  axis_names={"pod","data","model"})
     raw = jax.random.normal(jax.random.PRNGKey(1), (8*n,))
     q = jax.vmap(lambda v: GroupedSign(group_size=32).apply(v)
                  )(raw.reshape(8, n)).reshape(-1)
@@ -68,8 +68,7 @@ def test_phase2_sign_is_contraction():
                                         dense_allreduce,
                                         CodingCollectiveConfig)
     from repro.core.compression import GroupedSign
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    mesh = make_mesh((4, 2), ("data", "model"))
     cfg = CodingCollectiveConfig(coding_axes=("data",), group_size=32,
                                  phase2_sign=True)
     cfg0 = CodingCollectiveConfig(coding_axes=("data",), group_size=32)
@@ -80,9 +79,9 @@ def test_phase2_sign_is_contraction():
                 two_phase_sign_allreduce(c, cfg0, mask))
 
     n = 256
-    f = jax.shard_map(body, mesh=mesh, in_specs=P(("data","model")),
-                      out_specs=(P(("data","model")),)*2,
-                      axis_names={"data","model"})
+    f = shard_map(body, mesh, in_specs=P(("data","model")),
+                  out_specs=(P(("data","model")),)*2,
+                  axis_names={"data","model"})
     raw = jax.random.normal(jax.random.PRNGKey(1), (8*n,))
     q = jax.vmap(lambda v: GroupedSign(group_size=32).apply(v)
                  )(raw.reshape(8, n)).reshape(-1)
@@ -97,6 +96,87 @@ def test_phase2_sign_is_contraction():
     """)
 
 
+def test_coded_allreduce_matches_dense_oracle_sweep():
+    """`two_phase_coded_allreduce` == dense masked psum for every wire
+    format x straggler mask x num_buckets in {1, 4}, and `cocoef_update`
+    matches a host-side Algorithm-1 oracle for every compressor mode
+    (acceptance: TopK/BlockTopK end-to-end on the coded train path)."""
+    run_sub("""
+    from jax.sharding import PartitionSpec as P
+    from repro.core.collectives import (two_phase_coded_allreduce,
+                                        dense_allreduce,
+                                        CodingCollectiveConfig,
+                                        SignWire, SparseWire, DenseWire)
+    from repro.core.cocoef import CocoEFConfig, cocoef_update
+    mesh = make_mesh((4, 2), ("data", "model"))
+    cfg = CodingCollectiveConfig(coding_axes=("data",), group_size=32)
+    masks = [jnp.ones((4,)), jnp.array([1., 0., 1., 1.]),
+             jnp.array([0., 0., 1., 0.])]
+    wires = [SignWire(group_size=32), SparseWire(k_per_block=4, block_size=64),
+             SparseWire(k_per_block=4, block_size=64, value_dtype="bfloat16"),
+             DenseWire()]
+    n = 2048   # per-device flat size: multiple of 4 chunks * 64 block * 4 bkts
+    raw = jax.random.normal(jax.random.PRNGKey(1), (8 * n,))
+    for wire in wires:
+        assert wire.wire_bytes(n) <= 4 * n   # never worse than dense f32
+        for num_buckets in (1, 4):
+            nb = n // num_buckets
+            def body(c, mask):
+                outs = []
+                for c_b in c.reshape(num_buckets, -1):
+                    outs.append((two_phase_coded_allreduce(c_b, wire, cfg,
+                                                           mask),
+                                 dense_allreduce(c_b, cfg, mask)))
+                return (jnp.concatenate([o[0] for o in outs]),
+                        jnp.concatenate([o[1] for o in outs]))
+            f = shard_map(body, mesh,
+                          in_specs=(P(("data", "model")), P()),
+                          out_specs=(P(("data", "model")),) * 2,
+                          axis_names={"data", "model"})
+            q = jax.vmap(wire.roundtrip)(
+                raw.reshape(8 * num_buckets, nb)).reshape(-1)
+            jf = jax.jit(f)
+            for mask in masks:
+                g1, g2 = jf(q, mask)
+                err = float(np.abs(np.asarray(g1) - np.asarray(g2)).max())
+                assert err <= 1e-5, (type(wire).__name__, num_buckets, err)
+
+    # cocoef_update end-to-end vs host oracle, all compressor modes
+    gamma = 0.1
+    g = jax.random.normal(jax.random.PRNGKey(2), (8 * n,))
+    e = jax.random.normal(jax.random.PRNGKey(3), (8 * n,)) * 0.1
+    mask = jnp.array([1., 0., 1., 1.])
+    for comp in ("sign", "block_topk", "topk", "identity"):
+        for num_buckets in (1, 4):
+            ccfg = CocoEFConfig(coding_axes=("data",), group_size=32,
+                                compressor=comp, block_size=64, k_per_block=4,
+                                topk_k=64, num_buckets=num_buckets)
+            f = shard_map(lambda gg, ee: cocoef_update(gg, ee, mask, gamma,
+                                                       ccfg),
+                          mesh, in_specs=(P(("data", "model")),) * 2,
+                          out_specs=(P(("data", "model")),) * 2,
+                          axis_names={"data", "model"})
+            ghat, e_new = jax.jit(f)(g, e)
+            # host oracle: per-device roundtrip of acc, masked sum over the
+            # coding (data) axis, EF update where the sender participated
+            acc = (gamma * g + e).reshape(4, 2, n)
+            def rt(v):
+                w = ccfg.wire_format(n // num_buckets, 4)
+                return jnp.concatenate([w.roundtrip(b) for b in
+                                        v.reshape(num_buckets, -1)])
+            c = jax.vmap(jax.vmap(rt))(acc)
+            want_ghat = (mask[:, None, None] * c).sum(0)      # (2, n)
+            want_e = jnp.where(mask[:, None, None] > 0, acc - c,
+                               e.reshape(4, 2, n))
+            err_g = float(jnp.abs(ghat.reshape(4, 2, n)
+                                  - want_ghat[None]).max())
+            err_e = float(jnp.abs(e_new.reshape(4, 2, n) - want_e).max())
+            assert err_g <= 1e-5 and err_e <= 1e-5, (comp, num_buckets,
+                                                     err_g, err_e)
+    """, timeout=900)
+
+
+@pytest.mark.slow
 def test_distributed_train_loss_decreases():
     run_sub("""
     import dataclasses
@@ -104,8 +184,7 @@ def test_distributed_train_loss_decreases():
     from repro.configs.common import ShapeCfg
     from repro.launch.train import TrainRun, build_train_setup, \
         make_batch_for_step
-    mesh = jax.make_mesh((2,2,2), ("pod","data","model"),
-                         axis_types=(jax.sharding.AxisType.Auto,)*3)
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
     shape = ShapeCfg("train", 32, 8)
     spec = REGISTRY["olmoe-1b-7b"]
     spec = dataclasses.replace(
@@ -126,6 +205,7 @@ def test_distributed_train_loss_decreases():
     """, timeout=900)
 
 
+@pytest.mark.slow
 def test_distributed_dense_matches_direct_sgd():
     """mode=dense, p=0: the aggregated update must equal a directly-computed
     full-batch weighted gradient step (validates stage-1 coding + stage-2
@@ -137,8 +217,7 @@ def test_distributed_dense_matches_direct_sgd():
     from repro.launch.train import TrainRun, build_train_setup, \
         make_batch_for_step
     from repro.nn import Model
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    mesh = make_mesh((4, 2), ("data", "model"))
     shape = ShapeCfg("train", 32, 8)
     spec = REGISTRY["phi3-medium-14b"]
     spec = dataclasses.replace(
@@ -167,6 +246,7 @@ def test_distributed_dense_matches_direct_sgd():
     """, timeout=900)
 
 
+@pytest.mark.slow
 def test_distributed_cocoef_matches_reference_sim():
     """Distributed COCO-EF (p=0, all ranks participate) == the (N, D)
     reference simulator on identical coded gradients: same theta update,
@@ -180,8 +260,7 @@ def test_distributed_cocoef_matches_reference_sim():
     from repro.core import compression as C
     from repro.nn import Model
     from jax.flatten_util import ravel_pytree
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    mesh = make_mesh((4, 2), ("data", "model"))
     shape = ShapeCfg("train", 32, 8)
     spec = REGISTRY["phi3-medium-14b"]
     spec = dataclasses.replace(

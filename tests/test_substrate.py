@@ -157,8 +157,8 @@ def test_rules_fallback_placement():
     from repro.sharding import rules
     if len(jax.devices()) != 1:
         pytest.skip("single-device rule check")
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.compat import make_mesh
+    mesh = make_mesh((1, 1), ("data", "model"))
     # fake axis sizes by monkeypatching through a larger abstract mesh is
     # overkill; check the pure functions instead:
     sizes = {"data": 16, "model": 16}

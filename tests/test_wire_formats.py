@@ -1,0 +1,234 @@
+"""WireFormat layer: roundtrip fidelity, wire-bit accounting vs the
+compressor contracts, degenerate shapes/values, and Pallas-vs-jnp parity
+for the sparse (top-K) wire kernels."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import compression as C
+from repro.core.collectives import (DenseWire, SignWire, SparseWire,
+                                    get_wire, wire_for_compressor)
+from repro.kernels import ref
+from repro.kernels.topk_pack import topk_decode_reduce, topk_pack
+
+WIRES = [
+    pytest.param(SignWire(group_size=32), id="sign32"),
+    pytest.param(SignWire(group_size=128), id="sign128"),
+    pytest.param(SparseWire(k_per_block=4, block_size=64), id="sparse4of64"),
+    pytest.param(SparseWire(k_per_block=8, block_size=128,
+                            value_dtype="bfloat16"), id="sparse8of128bf16"),
+    pytest.param(DenseWire(), id="dense_f32"),
+    pytest.param(DenseWire(value_dtype="bfloat16"), id="dense_bf16"),
+]
+
+
+def _rand(n, seed=0, scale=2.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(seed), (n,))
+
+
+# ---------------------------------------------------------------------------
+# roundtrip fidelity: the wire realizes its compressor, and is idempotent
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("wire", WIRES)
+def test_roundtrip_idempotent(wire):
+    n = 1024
+    x = _rand(n, seed=1)
+    c1 = np.asarray(wire.roundtrip(x))
+    c2 = np.asarray(wire.roundtrip(jnp.asarray(c1)))
+    np.testing.assert_allclose(c2, c1, rtol=3e-7, atol=1e-7)
+
+
+def test_sign_wire_equals_grouped_sign():
+    n, g = 1024, 32
+    x = _rand(n, seed=2)
+    rt = np.asarray(SignWire(group_size=g).roundtrip(x))
+    comp = np.asarray(C.GroupedSign(group_size=g).apply(x))
+    np.testing.assert_allclose(rt, comp, rtol=1e-6)
+
+
+def test_sparse_wire_equals_block_topk():
+    n, k, b = 1024, 4, 64
+    x = _rand(n, seed=3)
+    rt = np.asarray(SparseWire(k_per_block=k, block_size=b).roundtrip(x))
+    comp = np.asarray(C.BlockTopK(k_per_block=k, block_size=b).apply(x))
+    # same support (the selected coordinates), values to ~1 ulp of the
+    # per-block scale normalization
+    np.testing.assert_array_equal(rt != 0, comp != 0)
+    np.testing.assert_allclose(rt, comp, rtol=3e-7, atol=1e-7)
+
+
+def test_dense_wire_f32_is_lossless():
+    x = _rand(512, seed=4)
+    np.testing.assert_array_equal(np.asarray(DenseWire().roundtrip(x)),
+                                  np.asarray(x))
+
+
+def test_stochastic_sign_rides_sign_wire_lossless():
+    """Unbiased stochastic sign outputs are ±m per group -> exactly
+    representable on the sign wire (equal-overhead baseline of Sec. V)."""
+    n, g = 512, 32
+    x = _rand(n, seed=5)
+    q = C.StochasticSign(group_size=g).apply(x, key=jax.random.PRNGKey(9))
+    wire = wire_for_compressor(C.StochasticSign(group_size=g), n)
+    np.testing.assert_allclose(np.asarray(wire.roundtrip(q)), np.asarray(q),
+                               rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# wire accounting vs Compressor.wire_bits
+# ---------------------------------------------------------------------------
+
+def test_sign_wire_bytes_match_compressor_bits():
+    for n, g in [(1024, 32), (4096, 512)]:
+        assert SignWire(group_size=g).wire_bytes(n) * 8 \
+            == C.GroupedSign(group_size=g).wire_bits(n)
+
+
+def test_sparse_wire_bytes_match_compressor_bits():
+    """SparseWire = BlockTopK payload + one f32 scale per block."""
+    for n, k, b in [(1024, 4, 64), (4096, 8, 256)]:
+        nblocks = n // b
+        wire = SparseWire(k_per_block=k, block_size=b)
+        assert wire.wire_bytes(n) * 8 \
+            == C.BlockTopK(k_per_block=k, block_size=b).wire_bits(n) \
+            + 32 * nblocks
+        # bf16 values shave 16 bits per kept coordinate
+        wire16 = SparseWire(k_per_block=k, block_size=b,
+                            value_dtype="bfloat16")
+        assert (wire.wire_bytes(n) - wire16.wire_bytes(n)) * 8 \
+            == 16 * nblocks * k
+
+
+def test_dense_wire_bytes_match_identity_bits():
+    assert DenseWire().wire_bytes(1000) * 8 == C.Identity().wire_bits(1000)
+
+
+def test_compressed_wires_beat_dense_f32():
+    """Acceptance: measured wire bytes < dense f32 for sign AND top-K."""
+    n = 1 << 20
+    dense = DenseWire().wire_bytes(n)
+    assert SignWire(group_size=512).wire_bytes(n) < dense / 20
+    assert SparseWire(k_per_block=8, block_size=512).wire_bytes(n) < dense / 20
+
+
+def test_sparse_index_dtype_narrows():
+    assert SparseWire(block_size=256).index_dtype == jnp.uint16
+    assert SparseWire(block_size=1 << 17).index_dtype == jnp.uint32
+    idx, _, _ = SparseWire(k_per_block=2, block_size=64).pack(_rand(256))
+    assert idx.dtype == jnp.uint16
+
+
+# ---------------------------------------------------------------------------
+# degenerate inputs: invalid sizes, zeros, ±0
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("wire", WIRES)
+def test_check_rejects_odd_sizes(wire):
+    a = wire.alignment()
+    if a > 1:
+        with pytest.raises(ValueError):
+            wire.check(a + 1, 1)            # not a multiple of the alignment
+    with pytest.raises(ValueError):
+        wire.check(4 * a, 8)                # not a multiple of nd * alignment
+    wire.check(8 * a, 8)                    # padded size passes
+
+
+@pytest.mark.parametrize("wire", WIRES)
+def test_zero_vector_roundtrips_to_zero(wire):
+    n = 512
+    rt = np.asarray(wire.roundtrip(jnp.zeros((n,))))
+    np.testing.assert_array_equal(rt, np.zeros((n,)))
+
+
+def test_sign_convention_negative_zero():
+    """sign(±0) := +1 — packing -0.0 and +0.0 yields identical words, so
+    the wire is deterministic across platforms' zero signs."""
+    g = 32
+    base = _rand(64, seed=6)
+    plus = jnp.where(jnp.arange(64) % 2 == 0, 0.0, base)
+    minus = jnp.where(jnp.arange(64) % 2 == 0, -0.0, base)
+    wp, sp_ = SignWire(group_size=g).pack(plus)
+    wm, sm = SignWire(group_size=g).pack(minus)
+    np.testing.assert_array_equal(np.asarray(wp), np.asarray(wm))
+    np.testing.assert_allclose(np.asarray(sp_), np.asarray(sm))
+
+
+# ---------------------------------------------------------------------------
+# registry / compressor mapping
+# ---------------------------------------------------------------------------
+
+def test_wire_registry():
+    assert isinstance(get_wire("sign", group_size=64), SignWire)
+    assert isinstance(get_wire("sparse", k_per_block=2, block_size=64),
+                      SparseWire)
+    assert isinstance(get_wire("dense"), DenseWire)
+    with pytest.raises(KeyError):
+        get_wire("nope")
+
+
+def test_wire_for_compressor_mapping():
+    n, nd = 4096, 8
+    w = wire_for_compressor(C.GroupedSign(group_size=64), n, nd)
+    assert isinstance(w, SignWire) and w.group_size == 64
+    w = wire_for_compressor(C.BlockTopK(k_per_block=4, block_size=128), n, nd)
+    assert isinstance(w, SparseWire) and w.block_size == 128
+    w = wire_for_compressor(C.TopK(k=32), n, nd)
+    assert isinstance(w, SparseWire)
+    assert w.block_size == n // nd and w.k_per_block == 32 // nd
+    assert isinstance(wire_for_compressor(C.Identity(), n, nd), DenseWire)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernels vs jnp references (sparse wire)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k,block", [(4, 128), (8, 256), (16, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_topk_pack_kernel_matches_ref(k, block, dtype):
+    n = 8 * block * 2
+    x = _rand(n, seed=k + block).astype(dtype)
+    i1, v1, s1 = topk_pack(x.astype(jnp.float32), k, block, interpret=True)
+    i2, v2, s2 = ref.topk_pack_ref(x.astype(jnp.float32), k, block)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+
+
+def test_topk_pack_kernel_matches_sparse_wire():
+    """The Pallas pack agrees with SparseWire.pack (modulo the wire's
+    narrow dtype casts) so either can feed the coded collective."""
+    n, k, b = 8 * 128, 4, 128
+    x = _rand(n, seed=11)
+    ik, vk, sk = topk_pack(x, k, b, interpret=True)
+    iw, vw, sw = SparseWire(k_per_block=k, block_size=b).pack(x)
+    np.testing.assert_array_equal(np.asarray(ik),
+                                  np.asarray(iw).astype(np.int32))
+    np.testing.assert_allclose(np.asarray(vk), np.asarray(vw), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(sk), np.asarray(sw))
+
+
+@pytest.mark.parametrize("n_senders", [2, 4])
+def test_topk_decode_reduce_kernel_matches_ref(n_senders):
+    rows, k, b = 16, 8, 128
+    packs = [ref.topk_pack_ref(_rand(rows * b, seed=i), k, b)
+             for i in range(n_senders)]
+    idx = jnp.stack([p[0] for p in packs])
+    val = jnp.stack([p[1] for p in packs])
+    sc = jnp.stack([p[2] for p in packs])
+    mask = (jnp.arange(n_senders) % 2).astype(jnp.float32)
+    out_k = topk_decode_reduce(idx, val, sc, mask, b, interpret=True)
+    out_r = ref.topk_decode_reduce_ref(idx, val, sc, mask, b)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_topk_unpack_ref_roundtrip():
+    n, k, b = 1024, 8, 128
+    x = _rand(n, seed=12)
+    i, v, s = ref.topk_pack_ref(x, k, b)
+    rt = ref.topk_unpack_ref(i, v, s, b)
+    bt = ref.block_topk_ref(x, k, b)
+    np.testing.assert_allclose(np.asarray(rt), np.asarray(bt),
+                               rtol=3e-7, atol=1e-7)
