@@ -1,49 +1,159 @@
-"""Microbenchmarks of the COCO-EF hot-path ops (jnp reference path — the
-numbers on CPU are for relative comparisons; Pallas engages on TPU)."""
+"""Microbenchmarks of the COCO-EF hot-path ops: fused vs unfused.
+
+Every `*_local_step` pair times the SAME math two ways:
+
+  unfused — the pre-backend-layer train path: accumulate (gamma*g + e),
+            pack, unpack, error-update as four separately-jitted stages,
+            each a full HBM round-trip over the model-sized vector.
+  fused   — the `WireFormat.fused_local_step` entry point the train path
+            now calls (kernels.ops dispatch: Pallas on TPU, single-fusion
+            jnp reference elsewhere).
+
+Decode pairs compare the vmapped dense unpack + masked sum (unfused)
+against the fused decode_reduce.  Numbers on CPU are for relative
+comparison; Pallas engages on TPU.  Writes BENCH_kernels.json so the perf
+trajectory is tracked across PRs (CI uploads it as an artifact).
+"""
+import argparse
+import json
 import time
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ref
+from repro.kernels import ops, ref
+
+N_DEFAULT = 1 << 22     # 4M-element gradient slice
+GROUP = 512
+K, BLOCK = 16, 512
+N_SENDERS = 8
 
 
-def _time(fn, *args, iters=20):
-    fn(*args).block_until_ready() if hasattr(fn(*args), "block_until_ready") \
-        else jax.block_until_ready(fn(*args))
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = fn(*args)
+def _time(fn, *args, iters=20, repeats=3):
+    """us/call: best (min) of `repeats` batches of `iters` calls each —
+    the min filters out co-tenant noise on a shared box.  Warms up ONCE."""
+    out = fn(*args)                      # warm up ONCE (compile + first run)
     jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters * 1e6
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = fn(*args)
+        jax.block_until_ready(out)
+        best = min(best, (time.perf_counter() - t0) / iters * 1e6)
+    return best
 
 
-def run():
-    n, g = 1 << 22, 512     # 4M-element gradient slice
+def _pipeline(*stages):
+    """Run separately-jitted stages back to back (each stage receives the
+    previous stage's outputs spliced after the captured leading args)."""
+    def run_all(*args):
+        out = args
+        for fn in stages:
+            out = fn(*out)
+            if not isinstance(out, tuple):
+                out = (out,)
+        return out
+    return run_all
+
+
+def run(n: int = N_DEFAULT, iters: int = 20):
+    """Paired jnp-vs-fused timings; returns a list of row dicts."""
+    gamma, mask_self = 0.01, 1.0
     x = jax.random.normal(jax.random.PRNGKey(0), (n,))
     e = jax.random.normal(jax.random.PRNGKey(1), (n,)) * 0.1
+    rows = []
 
-    pack = jax.jit(lambda v: ref.sign_pack_ref(v, g))
-    fused = jax.jit(lambda a, b: ref.ef_sign_fused_ref(a, b, 0.01, 1.0, g))
-    topk = jax.jit(lambda v: ref.block_topk_ref(v, 16, 512))
-    tpack = jax.jit(lambda v: ref.topk_pack_ref(v, 16, 512))
+    def pair(name, unfused_us, fused_us):
+        rows.append({"name": name, "n": n,
+                     "jnp_unfused_us": round(unfused_us, 1),
+                     "fused_us": round(fused_us, 1),
+                     "speedup": round(unfused_us / fused_us, 2)})
 
-    w, s = pack(x)
-    unpack = jax.jit(lambda ww, ss: ref.sign_unpack_ref(ww, ss, g))
-    ti, tv, ts = tpack(x)
-    tunpack = jax.jit(lambda a, b, c: ref.topk_unpack_ref(a, b, c, 512))
+    # ---- sign wire: fused local step (EF + pack + c) ----------------------
+    acc_fn = jax.jit(lambda g, ee: (gamma * g + ee, g, ee))
+    pack_fn = jax.jit(lambda a, g, ee: ref.sign_pack_ref(a, GROUP)
+                      + (a, ee))
+    unpack_fn = jax.jit(lambda w, s, a, ee:
+                        (ref.sign_unpack_ref(w, s, GROUP), w, s, a, ee))
+    enew_fn = jax.jit(lambda c, w, s, a, ee:
+                      (w, s, c, jnp.where(mask_self > 0, a - c, ee)))
+    unfused = _pipeline(acc_fn, pack_fn, unpack_fn, enew_fn)
+    fused = jax.jit(lambda g, ee: ops.ef_sign_fused(g, ee, gamma, mask_self,
+                                                    GROUP))
+    pair("ef_sign_local_step",
+         _time(unfused, x, e, iters=iters), _time(fused, x, e, iters=iters))
 
-    rows = [
-        ("sign_pack_4M", _time(pack, x), n * 4 / 8 / 1.0),   # bytes ratio
-        ("sign_unpack_4M", _time(unpack, w, s), 0),
-        ("ef_fused_4M", _time(fused, x, e), 0),
-        ("block_topk_4M", _time(topk, x), 0),
-        ("topk_pack_4M", _time(tpack, x), 0),
-        ("topk_unpack_4M", _time(tunpack, ti, tv, ts), 0),
-    ]
+    # ---- sparse wire: fused local step ------------------------------------
+    tacc_fn = jax.jit(lambda g, ee: (gamma * g + ee, g, ee))
+    tpack_fn = jax.jit(lambda a, g, ee: ref.topk_pack_ref(a, K, BLOCK)
+                       + (a, ee))
+    tunpack_fn = jax.jit(lambda i, v, s, a, ee:
+                         (ref.topk_unpack_ref(i, v, s, BLOCK), i, v, s, a, ee))
+    tenew_fn = jax.jit(lambda c, i, v, s, a, ee:
+                       (i, v, s, c, jnp.where(mask_self > 0, a - c, ee)))
+    tunfused = _pipeline(tacc_fn, tpack_fn, tunpack_fn, tenew_fn)
+    tfused = jax.jit(lambda g, ee: ops.ef_topk_fused(g, ee, gamma, mask_self,
+                                                     K, BLOCK))
+    pair("ef_topk_local_step",
+         _time(tunfused, x, e, iters=iters), _time(tfused, x, e, iters=iters))
+
+    # ---- decode + masked reduce (server side, N senders) ------------------
+    nc = n // N_SENDERS                  # per-sender chunk, total work = n
+    mask = (jnp.arange(N_SENDERS) % 2).astype(jnp.float32)
+    w, s = ref.sign_pack_ref(x[:nc], GROUP)
+    words = jnp.stack([w] * N_SENDERS)
+    scales = jnp.stack([s] * N_SENDERS)
+    dec_unf = _pipeline(
+        jax.jit(lambda ws, ss: (jax.vmap(
+            lambda a, b: ref.sign_unpack_ref(a, b, GROUP))(ws, ss),)),
+        jax.jit(lambda dec: (mask[:, None] * dec).sum(0)))
+    dec_fus = jax.jit(lambda ws, ss: ops.sign_decode_reduce(ws, ss, mask,
+                                                            GROUP))
+    pair("sign_decode_reduce",
+         _time(dec_unf, words, scales, iters=iters),
+         _time(dec_fus, words, scales, iters=iters))
+
+    ti, tv, ts = ref.topk_pack_ref(x[:nc], K, BLOCK)
+    tis = jnp.stack([ti] * N_SENDERS)
+    tvs = jnp.stack([tv] * N_SENDERS)
+    tss = jnp.stack([ts] * N_SENDERS)
+    tdec_unf = _pipeline(
+        jax.jit(lambda a, b, c: (jax.vmap(
+            lambda i, v, sc: ref.topk_unpack_ref(i, v, sc, BLOCK))(a, b, c),)),
+        jax.jit(lambda dec: (mask[:, None] * dec).sum(0)))
+    tdec_fus = jax.jit(lambda a, b, c: ops.topk_decode_reduce(a, b, c, mask,
+                                                              BLOCK))
+    pair("topk_decode_reduce",
+         _time(tdec_unf, tis, tvs, tss, iters=iters),
+         _time(tdec_fus, tis, tvs, tss, iters=iters))
+
     return rows
 
 
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=N_DEFAULT,
+                    help="flat vector length (default 4M)")
+    ap.add_argument("--iters", type=int, default=20)
+    ap.add_argument("--json", default="BENCH_kernels.json",
+                    help="artifact path ('' to skip)")
+    args = ap.parse_args()
+
+    rows = run(n=args.n, iters=args.iters)
+    print(f"{'op':24s} {'jnp_unfused_us':>14s} {'fused_us':>10s} "
+          f"{'speedup':>8s}")
+    for r in rows:
+        print(f"{r['name']:24s} {r['jnp_unfused_us']:14.1f} "
+              f"{r['fused_us']:10.1f} {r['speedup']:7.2f}x")
+    if args.json:
+        artifact = {"n": args.n, "iters": args.iters,
+                    "jax": jax.__version__,
+                    "backend": jax.default_backend(), "rows": rows}
+        with open(args.json, "w") as f:
+            json.dump(artifact, f, indent=2)
+        print(f"wrote {args.json}")
+
+
 if __name__ == "__main__":
-    for name, us, derived in run():
-        print(f"{name},{us:.1f},{derived}")
+    main()

@@ -65,8 +65,9 @@ def main() -> None:
         rows.append((f"comm_volume[{name}]", 0.0,
                      f"bits={bits}|x{ratio:.1f}"))
 
-    for name, us, derived in kernel_bench.run():
-        rows.append((name, us, derived))
+    for r in kernel_bench.run():
+        rows.append((f"kernel[{r['name']}]", r["fused_us"],
+                     f"unfused={r['jnp_unfused_us']}us|x{r['speedup']}"))
 
     # roofline summary (from cached dry-run artifacts)
     try:

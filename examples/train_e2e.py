@@ -33,6 +33,10 @@ def main():
                     help="phase-1 wire compressor (WireFormat selection)")
     ap.add_argument("--num-buckets", type=int, default=1,
                     help="flat-vector buckets for comm overlap")
+    ap.add_argument("--backend", default="auto",
+                    choices=["auto", "pallas", "jnp"],
+                    help="fused-kernel dispatch for the wire hot path "
+                         "(auto = Pallas on TPU, jnp reference elsewhere)")
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_e2e_ckpt")
     args = ap.parse_args()
@@ -47,7 +51,8 @@ def main():
     setup = build_train_setup(spec, mesh, shape,
                               TrainRun(base_lr=5e-3, mode="cocoef",
                                        compressor=args.compressor,
-                                       num_buckets=args.num_buckets),
+                                       num_buckets=args.num_buckets,
+                                       backend=args.backend),
                               smoke=True)
     print(f"arch={args.arch} coding ranks={setup.n_code} "
           f"per-rank batch={setup.b_loc} local flat={setup.flat_pad}")

@@ -34,6 +34,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.compat import axis_size
+from repro.kernels.ops import backend_use_pallas
 from .collectives import (CodingCollectiveConfig, DenseWire, SignWire,
                           SparseWire, WireFormat, dense_allreduce,
                           two_phase_coded_allreduce)
@@ -57,13 +58,15 @@ class CocoEFConfig:
     phase2_dtype: str = "float32"     # f32 = paper-faithful broadcast
     phase2_sign: bool = False         # beyond-paper compressed broadcast
     num_buckets: int = 1              # split flat vector for comm overlap
+    backend: str = "auto"             # auto | pallas | jnp kernel dispatch
 
     def collective(self) -> CodingCollectiveConfig:
         return CodingCollectiveConfig(
             coding_axes=self.coding_axes,
             group_size=self.group_size,
             phase2_dtype=jnp.dtype(self.phase2_dtype),
-            phase2_sign=self.phase2_sign)
+            phase2_sign=self.phase2_sign,
+            backend=self.backend)
 
     def wire_format(self, n: int, nd: int) -> WireFormat:
         """Wire format for one bucket of `n` coords over `nd` chunks."""
@@ -153,6 +156,10 @@ def _bucketed(flat: jnp.ndarray, num_buckets: int):
     return flat.reshape(num_buckets, -1)
 
 
+def _joined(parts: List[jnp.ndarray]) -> jnp.ndarray:
+    return parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+
+
 def cocoef_update(g_local: jnp.ndarray, e_local: jnp.ndarray,
                   mask: jnp.ndarray, gamma, cfg: CocoEFConfig
                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -164,6 +171,10 @@ def cocoef_update(g_local: jnp.ndarray, e_local: jnp.ndarray,
     gamma:   scalar learning rate (may be traced — lr schedules).
     Returns (ghat_local, new_e_local); ghat is sum_i mask_i C_or_id(acc_i),
     already scaled by gamma per eq. (4): apply as  params -= ghat.
+
+    Execution routes through the wire's fused backend (cfg.backend):
+    `wire.fused_local_step` produces payload + new error in one pass over
+    g/e (cocoef), and coco/dense never materialize the reconstruction c.
     """
     coll = cfg.collective()
     my_idx = coding_rank_index(cfg.coding_axes)
@@ -174,26 +185,30 @@ def cocoef_update(g_local: jnp.ndarray, e_local: jnp.ndarray,
         ghat = dense_allreduce(acc, coll, mask)
         return ghat, e_local
 
-    if cfg.mode == "coco":
-        acc = gamma * g_local
-    else:  # cocoef
-        acc = gamma * g_local + e_local.astype(jnp.float32)
-
     nd = axis_size(coll.chunk_axis)
-    ghat_parts, c_parts = [], []
-    for acc_b in _bucketed(acc, cfg.num_buckets):
-        wire = cfg.wire_format(acc_b.shape[0], nd)
-        payload = wire.pack(acc_b)          # pack once; collective reuses it
-        c_b = wire.unpack(payload)
-        ghat_parts.append(two_phase_coded_allreduce(c_b, wire, coll, mask,
-                                                    payload=payload))
-        c_parts.append(c_b)
-    ghat = jnp.concatenate(ghat_parts)
-    c = jnp.concatenate(c_parts)
+    use_pallas = backend_use_pallas(cfg.backend)
 
     if cfg.mode == "coco":
-        new_e = e_local
-    else:
-        new_e = jnp.where(my_mask > 0, acc - c,
-                          e_local.astype(jnp.float32))
+        # no error feedback: pack-and-send only — C(acc) is never needed
+        # locally, so neither c nor the dead bucket concat is materialized
+        ghat_parts = []
+        for acc_b in _bucketed(gamma * g_local, cfg.num_buckets):
+            wire = cfg.wire_format(acc_b.shape[0], nd)
+            payload = wire.fused_pack(acc_b, use_pallas=use_pallas)
+            ghat_parts.append(two_phase_coded_allreduce(
+                None, wire, coll, mask, payload=payload))
+        return _joined(ghat_parts), e_local
+
+    # cocoef: fused accumulate + compress + error update per bucket
+    ghat_parts, e_parts = [], []
+    for g_b, e_b in zip(_bucketed(g_local, cfg.num_buckets),
+                        _bucketed(e_local, cfg.num_buckets)):
+        wire = cfg.wire_format(g_b.shape[0], nd)
+        payload, _, e_new_b = wire.fused_local_step(
+            g_b, e_b, gamma, my_mask, use_pallas=use_pallas, want_c=False)
+        ghat_parts.append(two_phase_coded_allreduce(
+            None, wire, coll, mask, payload=payload))
+        e_parts.append(e_new_b)
+    ghat = _joined(ghat_parts)
+    new_e = _joined(e_parts)
     return ghat, new_e.astype(jnp.dtype(cfg.ef_dtype))

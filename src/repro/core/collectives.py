@@ -41,11 +41,33 @@ path: SignWire <-> GroupedSign (lossless re-pack), SparseWire <-> BlockTopK
 Roundtrips are idempotent, so the collective may pack an already-compressed
 vector without changing it (beyond ulp-level rescaling noise).
 
+Fused execution backend
+-----------------------
+The train hot path does NOT run the pure-jnp pack/unpack above — those are
+the semantic contract (and the `backend="jnp"` reference).  Two fused entry
+points route the per-step work through `repro.kernels` (Pallas on TPU,
+interpret mode elsewhere, jnp oracles as the fallback):
+
+  fused_local_step(g, e, gamma, mask_self)
+                   one HBM pass producing (payload, c, e_new) — the whole
+                   Algorithm-1 local step (accumulate + compress + error
+                   update) without materializing intermediates.
+  decode_reduce(payloads, sender_mask)
+                   fused decode + straggler-mask + sum over senders; never
+                   materializes the per-sender dense (nd, n/nd) tensor.
+  payload_n(payload)
+                   flat length a payload represents (lets hot-path callers
+                   skip carrying the dense c alongside the payload).
+
+Base-class implementations compose pack/unpack in plain jnp, so every new
+wire format arrives with a working fused path by construction; SignWire and
+SparseWire override them to dispatch into `kernels.ops` (ef_sign_fused /
+ef_topk_fused / sign_decode_reduce / topk_decode_reduce).  The
+`CodingCollectiveConfig.backend` knob ("auto" | "pallas" | "jnp") selects
+the implementation; "auto" uses Pallas exactly when running on TPU.
+
 Everything here runs inside a *fully manual* shard_map: inputs are the
-device-local flat gradient/error vectors.  The pure-jnp pack/unpack here are
-the reference implementations; `repro.kernels.sign_pack` and
-`repro.kernels.topk_pack` provide the Pallas TPU kernels for the same wire
-formats.
+device-local flat gradient/error vectors.
 """
 from __future__ import annotations
 
@@ -58,6 +80,9 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.compat import axis_size
+from repro.kernels import ops as kernel_ops
+from repro.kernels.sign_pack import G_BLK as _SIGN_G_BLK
+from repro.kernels.topk_pack import R_BLK as _TOPK_R_BLK
 
 __all__ = [
     "sign_pack",
@@ -102,10 +127,9 @@ def sign_unpack(words: jnp.ndarray, scales: jnp.ndarray, group_size: int,
                 dtype=jnp.float32) -> jnp.ndarray:
     """Inverse of sign_pack: returns sign(x) * scale_group, flat (n,)."""
     bits = (words[:, None] >> jnp.arange(32, dtype=jnp.uint32)) & jnp.uint32(1)
-    signs = bits.astype(dtype).reshape(-1) * 2.0 - 1.0
-    n = signs.shape[0]
-    per_group = jnp.repeat(scales.astype(dtype), group_size, total_repeat_length=n)
-    return signs * per_group
+    signs = bits.astype(dtype).reshape(-1, group_size) * 2.0 - 1.0
+    # per-group scale via broadcast (jnp.repeat lowers to a scatter loop)
+    return (signs * scales.astype(dtype)[:, None]).reshape(-1)
 
 
 def wire_bytes_sign(n: int, group_size: int) -> int:
@@ -144,6 +168,53 @@ class WireFormat:
         """The wire's compressor: what the receivers reconstruct."""
         return self.unpack(self.pack(x))
 
+    # ---- fused execution backend (see module docstring) -------------------
+    # Base implementations compose pack/unpack in plain jnp so that every
+    # wire format has a working fused path by construction; performance-
+    # critical wires override them to dispatch into repro.kernels.
+
+    def payload_n(self, payload: Tuple[jnp.ndarray, ...]) -> int:
+        """Flat length (n) the payload represents.  The base default
+        decompresses to find out — correct for any wire, but traces an
+        unpack; override with shape arithmetic (all built-ins do)."""
+        return self.unpack(payload).shape[0]
+
+    def fused_local_step(self, g: jnp.ndarray, e: jnp.ndarray, gamma,
+                         mask_self, use_pallas: Optional[bool] = None,
+                         want_c: bool = True
+                         ) -> Tuple[Tuple[jnp.ndarray, ...],
+                                    Optional[jnp.ndarray], jnp.ndarray]:
+        """Whole Algorithm-1 local step in one pass over the flat vectors:
+
+          acc     = gamma * g + e
+          payload = pack(acc)
+          c       = the transmitted reconstruction C(acc)
+          e_new   = mask_self ? acc - c : e
+
+        Returns (payload, c, e_new); c and e_new are f32.  `use_pallas`
+        overrides the platform default (None = Pallas iff on TPU).
+        want_c=False returns c=None and lets the kernels skip the
+        full-vector c store (the train path only ships the payload)."""
+        acc = gamma * g.astype(jnp.float32) + e.astype(jnp.float32)
+        payload = self.pack(acc)
+        c = self.unpack(payload)
+        e_new = jnp.where(mask_self > 0, acc - c, e.astype(jnp.float32))
+        return payload, (c if want_c else None), e_new
+
+    def fused_pack(self, x: jnp.ndarray, use_pallas: Optional[bool] = None
+                   ) -> Tuple[jnp.ndarray, ...]:
+        """pack(x) through the kernel backend (the non-EF hot path, where
+        no error state is carried and no reconstruction c is needed)."""
+        return self.pack(x)
+
+    def decode_reduce(self, payloads: Tuple[jnp.ndarray, ...],
+                      sender_mask: jnp.ndarray,
+                      use_pallas: Optional[bool] = None) -> jnp.ndarray:
+        """sum_i sender_mask_i * unpack(payloads_i) over the leading
+        (sender) dimension of every payload leaf -> (n,) f32."""
+        decoded = jax.vmap(lambda *p: self.unpack(p))(*payloads)
+        return (sender_mask[:, None] * decoded).sum(axis=0)
+
 
 @dataclasses.dataclass(frozen=True)
 class SignWire(WireFormat):
@@ -167,6 +238,33 @@ class SignWire(WireFormat):
 
     def alignment(self):
         return self.group_size
+
+    def payload_n(self, payload):
+        return payload[0].shape[0] * 32
+
+    def _tile(self) -> int:
+        return _SIGN_G_BLK * self.group_size
+
+    def fused_pack(self, x, use_pallas=None):
+        use = kernel_ops.resolve_use_pallas(use_pallas, x.shape[0],
+                                            self._tile())
+        return kernel_ops.sign_pack(x, self.group_size, use_pallas=use)
+
+    def fused_local_step(self, g, e, gamma, mask_self, use_pallas=None,
+                         want_c=True):
+        use = kernel_ops.resolve_use_pallas(use_pallas, g.shape[0],
+                                            self._tile())
+        words, scales, c, e_new = kernel_ops.ef_sign_fused(
+            g, e, gamma, mask_self, self.group_size, want_c=want_c,
+            use_pallas=use)
+        return (words, scales), c, e_new
+
+    def decode_reduce(self, payloads, sender_mask, use_pallas=None):
+        words, scales = payloads
+        use = kernel_ops.resolve_use_pallas(use_pallas, words.shape[1] * 32,
+                                            self._tile())
+        return kernel_ops.sign_decode_reduce(words, scales, sender_mask,
+                                             self.group_size, use_pallas=use)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -203,9 +301,9 @@ class SparseWire(WireFormat):
         xf = x.astype(jnp.float32)
         blocks = xf.reshape(-1, self.block_size)
         mag = jnp.abs(blocks)
-        _, idx = lax.top_k(mag, self.k_per_block)           # (nb, k)
+        topv, idx = lax.top_k(mag, self.k_per_block)        # (nb, k)
         sv = jnp.take_along_axis(blocks, idx, axis=-1)      # signed values
-        scale = jnp.max(mag, axis=-1)                       # (nb,)
+        scale = topv[:, 0]            # block max |.| = first top-k value
         safe = jnp.where(scale == 0, 1.0, scale)
         values = (sv / safe[:, None]).astype(jnp.dtype(self.value_dtype))
         return idx.astype(self.index_dtype), values, safe
@@ -227,6 +325,48 @@ class SparseWire(WireFormat):
 
     def alignment(self):
         return self.block_size
+
+    def payload_n(self, payload):
+        return payload[2].shape[0] * self.block_size
+
+    def _tile(self) -> int:
+        return _TOPK_R_BLK * self.block_size
+
+    def fused_pack(self, x, use_pallas=None):
+        use = kernel_ops.resolve_use_pallas(use_pallas, x.shape[0],
+                                            self._tile())
+        idx, val, scale = kernel_ops.topk_pack(x, self.k_per_block,
+                                               self.block_size,
+                                               use_pallas=use)
+        return (idx.astype(self.index_dtype),
+                val.astype(jnp.dtype(self.value_dtype)), scale)
+
+    def fused_local_step(self, g, e, gamma, mask_self, use_pallas=None,
+                         want_c=True):
+        use = kernel_ops.resolve_use_pallas(use_pallas, g.shape[0],
+                                            self._tile())
+        narrow = jnp.dtype(self.value_dtype) != jnp.float32
+        idx, val, scale, c, e_new = kernel_ops.ef_topk_fused(
+            g, e, gamma, mask_self, self.k_per_block, self.block_size,
+            want_c=want_c or narrow, use_pallas=use)
+        val = val.astype(jnp.dtype(self.value_dtype))
+        payload = (idx.astype(self.index_dtype), val, scale)
+        if narrow:
+            # the kernel's c holds the exact kept values; feed the narrow
+            # wire dtype's rounding into the error term (c + e_new == acc
+            # wherever mask_self participates)
+            c_q = self.unpack(payload)
+            e_new = jnp.where(mask_self > 0, c + e_new - c_q,
+                              e.astype(jnp.float32))
+            c = c_q
+        return payload, (c if want_c else None), e_new
+
+    def decode_reduce(self, payloads, sender_mask, use_pallas=None):
+        idx, val, scales = payloads
+        use = kernel_ops.resolve_use_pallas(
+            use_pallas, idx.shape[1] * self.block_size, self._tile())
+        return kernel_ops.topk_decode_reduce(idx, val, scales, sender_mask,
+                                             self.block_size, use_pallas=use)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -250,6 +390,13 @@ class DenseWire(WireFormat):
 
     def alignment(self):
         return 1
+
+    def payload_n(self, payload):
+        return payload[0].shape[0]
+
+    def decode_reduce(self, payloads, sender_mask, use_pallas=None):
+        return kernel_ops.dense_decode_reduce(payloads[0], sender_mask,
+                                              use_pallas=use_pallas)
 
 
 _WIRE_REGISTRY = {
@@ -320,6 +467,7 @@ class CodingCollectiveConfig:
     group_size: int = 512
     phase2_dtype: jnp.dtype = jnp.float32
     phase2_sign: bool = False  # beyond-paper: sign-compress the broadcast
+    backend: str = "auto"      # auto | pallas | jnp (kernel dispatch)
 
     @property
     def chunk_axis(self) -> str:
@@ -335,7 +483,7 @@ def _chunk_count(axis: str) -> int:
 
 
 def two_phase_coded_allreduce(
-    c_local: jnp.ndarray,
+    c_local: Optional[jnp.ndarray],
     wire: WireFormat,
     cfg: CodingCollectiveConfig,
     mask: jnp.ndarray,
@@ -349,18 +497,21 @@ def two_phase_coded_allreduce(
       `wire.roundtrip`), pack->unpack is lossless up to ulp-level rescaling
       and the result equals the dense masked psum (bit-for-bit for
       SignWire/DenseWire(f32); within 1-2 ulp for SparseWire — tested).
+      May be None when `payload` is given — the hot path never materializes
+      the dense c (it transmits the payload from `wire.fused_local_step`).
     mask: (n_coding_total,) straggler indicators, flattened over coding axes
       in row-major (outer..., chunk) order — identical on every rank.
     payload: optional pre-packed wire payload of c_local (hot-path callers
       that already packed to obtain c_local avoid a second pack here).
     Returns: (n,) aggregated ghat, identical on every coding rank.
     """
-    n = c_local.shape[0]
+    if payload is None:
+        if c_local is None:
+            raise ValueError("need c_local or a pre-packed payload")
+        payload = wire.pack(c_local)
+    n = wire.payload_n(payload) if c_local is None else c_local.shape[0]
     nd = _chunk_count(cfg.chunk_axis)
     wire.check(n, nd)
-
-    if payload is None:
-        payload = wire.pack(c_local)
 
     # ---- phase 1: all_to_all compressed chunks over the chunk axis -------
     # generic chunking: every payload leaf's leading dim is proportional to n
@@ -377,8 +528,10 @@ def two_phase_coded_allreduce(
     sender_base = outer_idx * nd
     sender_mask = lax.dynamic_slice_in_dim(mask, sender_base, nd)  # (nd,)
 
-    decoded = jax.vmap(lambda *p: wire.unpack(p))(*recv)      # (nd, n/nd)
-    chunk_sum = (sender_mask[:, None] * decoded).sum(axis=0)  # (n/nd,)
+    # fused decode + straggler-mask + sum over the nd senders    (n/nd,)
+    chunk_sum = wire.decode_reduce(
+        recv, sender_mask,
+        use_pallas=kernel_ops.backend_use_pallas(cfg.backend))
 
     # ---- hierarchical reduction over outer coding axes (dense, small) ----
     for ax in cfg.outer_axes:

@@ -15,6 +15,34 @@ def default_use_pallas() -> bool:
     return jax.default_backend() == "tpu"
 
 
+BACKENDS = ("auto", "pallas", "jnp")
+
+
+def backend_use_pallas(backend: str):
+    """Map the train-path `backend` knob onto the `use_pallas` tristate.
+
+    auto   -> None (Pallas on TPU, jnp reference elsewhere)
+    pallas -> True (interpret mode off-TPU — the parity-suite setting)
+    jnp    -> False
+    """
+    if backend == "auto":
+        return None
+    if backend == "pallas":
+        return True
+    if backend == "jnp":
+        return False
+    raise ValueError(f"unknown backend {backend!r}; have {BACKENDS}")
+
+
+def resolve_use_pallas(use_pallas, n: int, tile_elems: int) -> bool:
+    """Concrete kernel choice for a flat length `n`: the tristate
+    `use_pallas` (None = Pallas iff on TPU) guarded by the kernel's row
+    tile — shapes not divisible by `tile_elems` (G_BLK/R_BLK rows worth of
+    elements) fall back to the jnp reference, which has no tile."""
+    use = default_use_pallas() if use_pallas is None else use_pallas
+    return bool(use) and n % tile_elems == 0
+
+
 def sign_pack(x, group_size: int, use_pallas=None):
     use = default_use_pallas() if use_pallas is None else use_pallas
     if use:
@@ -27,12 +55,15 @@ def sign_unpack(words, scales, group_size: int):
     return ref.sign_unpack_ref(words, scales, group_size)
 
 
-def ef_sign_fused(g, e, gamma, mask_self, group_size: int, use_pallas=None):
+def ef_sign_fused(g, e, gamma, mask_self, group_size: int,
+                  want_c: bool = True, use_pallas=None):
     use = default_use_pallas() if use_pallas is None else use_pallas
     if use:
         return sp.ef_sign_fused(g, e, gamma, mask_self, group_size,
+                                want_c=want_c,
                                 interpret=jax.default_backend() != "tpu")
-    return ref.ef_sign_fused_ref(g, e, gamma, mask_self, group_size)
+    w, s, c, e_new = ref.ef_sign_fused_ref(g, e, gamma, mask_self, group_size)
+    return w, s, (c if want_c else None), e_new
 
 
 def sign_decode_reduce(words, scales, mask, group_size: int, use_pallas=None):
@@ -40,7 +71,25 @@ def sign_decode_reduce(words, scales, mask, group_size: int, use_pallas=None):
     if use:
         return sp.sign_decode_reduce(words, scales, mask, group_size,
                                      interpret=jax.default_backend() != "tpu")
-    return ref.sign_decode_reduce_ref(words, scales, mask, group_size)
+    return ref.sign_decode_reduce_scan(words, scales, mask, group_size)
+
+
+def ef_topk_fused(g, e, gamma, mask_self, k: int, block_size: int,
+                  want_c: bool = True, use_pallas=None):
+    use = default_use_pallas() if use_pallas is None else use_pallas
+    if use:
+        return tp.ef_topk_fused(g, e, gamma, mask_self, k, block_size,
+                                want_c=want_c,
+                                interpret=jax.default_backend() != "tpu")
+    i, v, s, c, e_new = ref.ef_topk_fused_ref(g, e, gamma, mask_self, k,
+                                              block_size)
+    return i, v, s, (c if want_c else None), e_new
+
+
+def dense_decode_reduce(values, mask, use_pallas=None):
+    # no Pallas variant: the masked sum is a single fused XLA reduction and
+    # the payload carries no decode step to fuse with
+    return ref.dense_decode_reduce_ref(values, mask)
 
 
 def block_topk(x, k: int, block_size: int, use_pallas=None):
@@ -70,5 +119,5 @@ def topk_decode_reduce(indices, values, scales, mask, block_size: int,
         return tp.topk_decode_reduce(indices, values, scales, mask,
                                      block_size,
                                      interpret=jax.default_backend() != "tpu")
-    return ref.topk_decode_reduce_ref(indices, values, scales, mask,
-                                      block_size)
+    return ref.topk_decode_reduce_scan(indices, values, scales, mask,
+                                       block_size)

@@ -26,11 +26,9 @@ def sign_pack_ref(x: jnp.ndarray, group_size: int
 def sign_unpack_ref(words: jnp.ndarray, scales: jnp.ndarray,
                     group_size: int) -> jnp.ndarray:
     bits = (words[:, None] >> jnp.arange(32, dtype=jnp.uint32)) & jnp.uint32(1)
-    signs = bits.astype(jnp.float32).reshape(-1) * 2.0 - 1.0
-    n = signs.shape[0]
-    per = jnp.repeat(scales.astype(jnp.float32), group_size,
-                     total_repeat_length=n)
-    return signs * per
+    signs = bits.astype(jnp.float32).reshape(-1, group_size) * 2.0 - 1.0
+    # per-group scale via broadcast (jnp.repeat lowers to a scatter loop)
+    return (signs * scales.astype(jnp.float32)[:, None]).reshape(-1)
 
 
 def ef_sign_fused_ref(g: jnp.ndarray, e: jnp.ndarray, gamma, mask_self,
@@ -41,11 +39,18 @@ def ef_sign_fused_ref(g: jnp.ndarray, e: jnp.ndarray, gamma, mask_self,
       c = sign_unpack(words, scales)
       e_new = mask_self ? acc - c : e
     Returns (words, scales, c, e_new)."""
-    acc = gamma * g.astype(jnp.float32) + e.astype(jnp.float32)
-    words, scales = sign_pack_ref(acc, group_size)
-    c = sign_unpack_ref(words, scales, group_size)
-    e_new = jnp.where(mask_self > 0, acc - c, e.astype(jnp.float32))
-    return words, scales, c, e_new
+    ef = e.astype(jnp.float32)
+    accg = (gamma * g.astype(jnp.float32) + ef).reshape(-1, group_size)
+    scales = jnp.mean(jnp.abs(accg), axis=-1)
+    bits = (accg.reshape(-1, 32) >= 0).astype(jnp.uint32)
+    words = (bits << jnp.arange(32, dtype=jnp.uint32)).sum(-1, dtype=jnp.uint32)
+    # c == sign_unpack_ref(words, scales) bit-for-bit, but straight from acc
+    # (no bit unpack): sign(acc) * group scale — matches the Pallas kernel.
+    # Staying 2D until the end keeps XLA's fusions on one layout.
+    c = jnp.where(accg >= 0, 1.0, -1.0) * scales[:, None]
+    e_new = jnp.where(mask_self > 0, accg - c,
+                      ef.reshape(-1, group_size))
+    return words, scales, c.reshape(-1), e_new.reshape(-1)
 
 
 def sign_decode_reduce_ref(words: jnp.ndarray, scales: jnp.ndarray,
@@ -55,6 +60,21 @@ def sign_decode_reduce_ref(words: jnp.ndarray, scales: jnp.ndarray,
     dec = jax.vmap(lambda w, s: sign_unpack_ref(w, s, group_size)
                    )(words, scales)
     return (mask[:, None] * dec).sum(0)
+
+
+def sign_decode_reduce_scan(words: jnp.ndarray, scales: jnp.ndarray,
+                            mask: jnp.ndarray, group_size: int) -> jnp.ndarray:
+    """Streaming jnp implementation of `sign_decode_reduce_ref` — identical
+    sender-order accumulation (bit-for-bit), but scans over senders so the
+    (N, n) dense tensor is never materialized.  This is the backend's jnp
+    fused decode path; the vmap oracle above stays the test reference."""
+    n = words.shape[1] * 32
+
+    def body(acc, inp):
+        w, s, m = inp
+        return acc + m * sign_unpack_ref(w, s, group_size), None
+    return jax.lax.scan(body, jnp.zeros((n,), jnp.float32),
+                        (words, scales, mask))[0]
 
 
 def topk_pack_ref(x: jnp.ndarray, k: int, block_size: int
@@ -67,11 +87,45 @@ def topk_pack_ref(x: jnp.ndarray, k: int, block_size: int
     per-block max |x| with 1.0 substituted for all-zero blocks)."""
     blocks = x.astype(jnp.float32).reshape(-1, block_size)
     mag = jnp.abs(blocks)
-    _, idx = jax.lax.top_k(mag, k)
+    topv, idx = jax.lax.top_k(mag, k)
     sv = jnp.take_along_axis(blocks, idx, axis=-1)
-    scale = jnp.max(mag, axis=-1)
+    scale = topv[:, 0]                     # block max |x| = first top-k value
     safe = jnp.where(scale == 0, 1.0, scale)
     return idx.astype(jnp.int32), sv / safe[:, None], safe
+
+
+def ef_topk_fused_ref(g: jnp.ndarray, e: jnp.ndarray, gamma, mask_self,
+                      k: int, block_size: int):
+    """Fused Algorithm-1 local step on the sparse (block top-K) wire:
+      acc = gamma * g + e
+      (indices, values, scales) = topk_pack(acc)
+      c = scatter of the kept SIGNED values (exact, pre-normalization —
+          bit-identical to the Pallas kernel; the receivers' decode
+          reapplies values * scale, 1-2 ulp away)
+      e_new = mask_self ? acc - c : e
+    Returns (indices, values, scales, c, e_new)."""
+    accb = (gamma * g.astype(jnp.float32)
+            + e.astype(jnp.float32)).reshape(-1, block_size)
+    mag = jnp.abs(accb)
+    topv, idx = jax.lax.top_k(mag, k)
+    sv = jnp.take_along_axis(accb, idx, axis=-1)
+    scale = topv[:, 0]
+    safe = jnp.where(scale == 0, 1.0, scale)
+    nb = accb.shape[0]
+    base = jnp.arange(nb, dtype=jnp.int32)[:, None] * block_size
+    flat_idx = (base + idx).reshape(-1)
+    c = jnp.zeros((nb * block_size,), jnp.float32
+                  ).at[flat_idx].set(sv.reshape(-1))
+    acc = accb.reshape(-1)
+    e_new = jnp.where(mask_self > 0, acc - c, e.astype(jnp.float32))
+    return idx.astype(jnp.int32), sv / safe[:, None], safe, c, e_new
+
+
+def dense_decode_reduce_ref(values: jnp.ndarray, mask: jnp.ndarray
+                            ) -> jnp.ndarray:
+    """Dense-wire decode+aggregate: values (N, n) any float dtype,
+    mask (N,) -> sum_i mask_i * f32(values_i)   (n,)."""
+    return (mask[:, None] * values.astype(jnp.float32)).sum(0)
 
 
 def topk_unpack_ref(indices: jnp.ndarray, values: jnp.ndarray,
@@ -93,6 +147,21 @@ def topk_decode_reduce_ref(indices: jnp.ndarray, values: jnp.ndarray,
     dec = jax.vmap(lambda i, v, s: topk_unpack_ref(i, v, s, block_size)
                    )(indices, values, scales)
     return (mask[:, None] * dec).sum(0)
+
+
+def topk_decode_reduce_scan(indices: jnp.ndarray, values: jnp.ndarray,
+                            scales: jnp.ndarray, mask: jnp.ndarray,
+                            block_size: int) -> jnp.ndarray:
+    """Streaming jnp implementation of `topk_decode_reduce_ref` — identical
+    sender-order accumulation (bit-for-bit) without the (N, n) dense
+    tensor; the backend's jnp fused decode path."""
+    n = indices.shape[1] * block_size
+
+    def body(acc, inp):
+        i, v, s, m = inp
+        return acc + m * topk_unpack_ref(i, v, s, block_size), None
+    return jax.lax.scan(body, jnp.zeros((n,), jnp.float32),
+                        (indices, values, scales, mask))[0]
 
 
 def block_topk_ref(x: jnp.ndarray, k: int, block_size: int) -> jnp.ndarray:

@@ -51,6 +51,9 @@ def sign_pack(x: jnp.ndarray, group_size: int, interpret: bool = True
               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """x: (n,) f32, n % (G_BLK * group_size) == 0."""
     n = x.shape[0]
+    if n % (G_BLK * group_size):
+        raise ValueError(f"sign_pack needs n % (G_BLK*group_size) == 0, got "
+                         f"n={n}, G_BLK={G_BLK}, group_size={group_size}")
     ng = n // group_size
     xg = x.reshape(ng, group_size)
     grid = (ng // G_BLK,)
@@ -72,7 +75,7 @@ def sign_pack(x: jnp.ndarray, group_size: int, interpret: bool = True
 
 
 def _ef_fused_kernel(g_ref, e_ref, gamma_ref, mask_ref,
-                     words_ref, scales_ref, c_ref, enew_ref):
+                     words_ref, scales_ref, *out_refs, want_c: bool):
     gamma = gamma_ref[0]
     mask = mask_ref[0]
     acc = gamma * g_ref[...].astype(jnp.float32) + e_ref[...].astype(jnp.float32)
@@ -80,25 +83,34 @@ def _ef_fused_kernel(g_ref, e_ref, gamma_ref, mask_ref,
     c = (jnp.where(acc >= 0, 1.0, -1.0) * scales)                  # (G, group)
     words_ref[...] = words
     scales_ref[...] = scales
-    c_ref[...] = c
-    enew_ref[...] = jnp.where(mask > 0, acc - c,
-                              e_ref[...].astype(jnp.float32))
+    if want_c:
+        out_refs[0][...] = c
+    out_refs[-1][...] = jnp.where(mask > 0, acc - c,
+                                  e_ref[...].astype(jnp.float32))
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("group_size", "interpret"))
+                   static_argnames=("group_size", "want_c", "interpret"))
 def ef_sign_fused(g: jnp.ndarray, e: jnp.ndarray, gamma, mask_self,
-                  group_size: int, interpret: bool = True):
+                  group_size: int, want_c: bool = True,
+                  interpret: bool = True):
     """Fused local COCO-EF step: one HBM pass over g/e producing the wire
     payload (words, scales), the decompressed C(acc) and the new error.
-    g, e: (n,) f32; gamma, mask_self: scalars."""
+    g, e: (n,) f32; gamma, mask_self: scalars.  want_c=False skips the
+    full-vector c store (the train path only ships the payload; a custom
+    call's outputs are not DCE-able, so the skip must be explicit)."""
     n = g.shape[0]
+    if n % (G_BLK * group_size):
+        raise ValueError(f"ef_sign_fused needs n % (G_BLK*group_size) == 0, "
+                         f"got n={n}, G_BLK={G_BLK}, group_size={group_size}")
     ng = n // group_size
     grid = (ng // G_BLK,)
     gamma = jnp.asarray(gamma, jnp.float32).reshape(1)
     mask_self = jnp.asarray(mask_self, jnp.float32).reshape(1)
-    words, scales, c, e_new = pl.pallas_call(
-        _ef_fused_kernel,
+    full = [pl.BlockSpec((G_BLK, group_size), lambda i: (i, 0)),
+            jax.ShapeDtypeStruct((ng, group_size), jnp.float32)]
+    outs = pl.pallas_call(
+        functools.partial(_ef_fused_kernel, want_c=want_c),
         grid=grid,
         in_specs=[
             pl.BlockSpec((G_BLK, group_size), lambda i: (i, 0)),
@@ -109,19 +121,16 @@ def ef_sign_fused(g: jnp.ndarray, e: jnp.ndarray, gamma, mask_self,
         out_specs=[
             pl.BlockSpec((G_BLK, group_size // 32), lambda i: (i, 0)),
             pl.BlockSpec((G_BLK, 1), lambda i: (i, 0)),
-            pl.BlockSpec((G_BLK, group_size), lambda i: (i, 0)),
-            pl.BlockSpec((G_BLK, group_size), lambda i: (i, 0)),
-        ],
+        ] + [full[0]] * (1 + want_c),
         out_shape=[
             jax.ShapeDtypeStruct((ng, group_size // 32), jnp.uint32),
             jax.ShapeDtypeStruct((ng, 1), jnp.float32),
-            jax.ShapeDtypeStruct((ng, group_size), jnp.float32),
-            jax.ShapeDtypeStruct((ng, group_size), jnp.float32),
-        ],
+        ] + [full[1]] * (1 + want_c),
         interpret=interpret,
     )(g.reshape(ng, group_size), e.reshape(ng, group_size), gamma, mask_self)
-    return (words.reshape(-1), scales.reshape(-1), c.reshape(-1),
-            e_new.reshape(-1))
+    words, scales = outs[0], outs[1]
+    c = outs[2].reshape(-1) if want_c else None
+    return words.reshape(-1), scales.reshape(-1), c, outs[-1].reshape(-1)
 
 
 def _decode_reduce_kernel(words_ref, scales_ref, mask_ref, out_ref,
@@ -144,6 +153,10 @@ def sign_decode_reduce(words: jnp.ndarray, scales: jnp.ndarray,
     words: (N, n/32) u32; scales: (N, n/g) f32; mask: (N,) f32 -> (n,)."""
     N = words.shape[0]
     n = words.shape[1] * 32
+    if n % (G_BLK * group_size):
+        raise ValueError(f"sign_decode_reduce needs n % (G_BLK*group_size) "
+                         f"== 0, got n={n}, G_BLK={G_BLK}, "
+                         f"group_size={group_size}")
     ng = n // group_size
     grid = (ng // G_BLK,)
     out = pl.pallas_call(

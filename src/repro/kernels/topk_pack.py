@@ -99,17 +99,88 @@ def topk_pack(x: jnp.ndarray, k: int, block_size: int, interpret: bool = True
     return idx, val, scale.reshape(-1)
 
 
+def _scatter_rows(idx, sval, shape):
+    """Dense (R, B) image of k kept entries per row: pos==idx_r selects."""
+    pos = jax.lax.broadcasted_iota(jnp.int32, shape, 1)
+    dense = jnp.zeros(shape, jnp.float32)
+    for r in range(idx.shape[-1]):                             # static loop
+        dense = dense + jnp.where(pos == idx[:, r:r + 1],
+                                  sval[:, r:r + 1], 0.0)
+    return dense
+
+
+def _ef_topk_fused_kernel(g_ref, e_ref, gamma_ref, mask_ref,
+                          idx_ref, val_ref, scale_ref, *out_refs,
+                          k: int, want_c: bool):
+    gamma = gamma_ref[0]
+    mask = mask_ref[0]
+    e = e_ref[...].astype(jnp.float32)
+    acc = gamma * g_ref[...].astype(jnp.float32) + e                # (R, B)
+    idx, sval, scale = _select_topk(acc, k)
+    safe = jnp.where(scale == 0, 1.0, scale)
+    c = _scatter_rows(idx, sval, acc.shape)   # exact kept values, c+e' = acc
+    idx_ref[...] = idx
+    val_ref[...] = sval / safe
+    scale_ref[...] = safe
+    if want_c:
+        out_refs[0][...] = c
+    out_refs[-1][...] = jnp.where(mask > 0, acc - c, e)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "block_size", "want_c", "interpret"))
+def ef_topk_fused(g: jnp.ndarray, e: jnp.ndarray, gamma, mask_self,
+                  k: int, block_size: int, want_c: bool = True,
+                  interpret: bool = True):
+    """Fused local COCO-EF step on the sparse wire: one HBM pass over g/e
+    producing the wire payload (indices, values, scales), the decompressed
+    C(acc) and the new error.  g, e: (n,) f32; gamma, mask_self: scalars.
+    Semantics match kernels.ref.ef_topk_fused_ref bit-for-bit.
+    want_c=False skips the full-vector c store (the train path only ships
+    the payload; a custom call's outputs are not DCE-able)."""
+    n = g.shape[0]
+    rows = n // block_size
+    if n % (R_BLK * block_size):
+        raise ValueError(f"ef_topk_fused needs n % (R_BLK*block_size) == 0, "
+                         f"got n={n}, R_BLK={R_BLK}, block_size={block_size}")
+    grid = (rows // R_BLK,)
+    gamma = jnp.asarray(gamma, jnp.float32).reshape(1)
+    mask_self = jnp.asarray(mask_self, jnp.float32).reshape(1)
+    full = [pl.BlockSpec((R_BLK, block_size), lambda i: (i, 0)),
+            jax.ShapeDtypeStruct((rows, block_size), jnp.float32)]
+    outs = pl.pallas_call(
+        functools.partial(_ef_topk_fused_kernel, k=k, want_c=want_c),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((R_BLK, block_size), lambda i: (i, 0)),
+            pl.BlockSpec((R_BLK, block_size), lambda i: (i, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=[
+            pl.BlockSpec((R_BLK, k), lambda i: (i, 0)),
+            pl.BlockSpec((R_BLK, k), lambda i: (i, 0)),
+            pl.BlockSpec((R_BLK, 1), lambda i: (i, 0)),
+        ] + [full[0]] * (1 + want_c),
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, k), jnp.int32),
+            jax.ShapeDtypeStruct((rows, k), jnp.float32),
+            jax.ShapeDtypeStruct((rows, 1), jnp.float32),
+        ] + [full[1]] * (1 + want_c),
+        interpret=interpret,
+    )(g.reshape(rows, block_size), e.reshape(rows, block_size), gamma,
+      mask_self)
+    idx, val, scale = outs[0], outs[1], outs[2]
+    c = outs[3].reshape(-1) if want_c else None
+    return idx, val, scale.reshape(-1), c, outs[-1].reshape(-1)
+
+
 def _topk_decode_reduce_kernel(idx_ref, val_ref, scale_ref, mask_ref, out_ref,
                                *, k: int, n_senders: int):
-    pos = jax.lax.broadcasted_iota(jnp.int32, out_ref.shape, 1)  # (R, B)
     acc = jnp.zeros(out_ref.shape, jnp.float32)
     for i in range(n_senders):                                   # static loop
         sv = val_ref[i] * scale_ref[i]                           # (R, k)
-        dense = jnp.zeros(out_ref.shape, jnp.float32)
-        for r in range(k):                                       # static loop
-            dense = dense + jnp.where(pos == idx_ref[i][:, r:r + 1],
-                                      sv[:, r:r + 1], 0.0)
-        acc = acc + mask_ref[i] * dense
+        acc = acc + mask_ref[i] * _scatter_rows(idx_ref[i], sv, out_ref.shape)
     out_ref[...] = acc
 
 

@@ -56,6 +56,7 @@ class TrainRun:
     phase2_dtype: str = "float32"
     phase2_sign: bool = False
     num_buckets: int = 1
+    backend: str = "auto"            # auto | pallas | jnp kernel dispatch
     seed: int = 0
     aux_weight: float = 0.01
     param_dtype: Optional[str] = None   # override cfg (e.g. "bfloat16")
@@ -149,7 +150,8 @@ def build_train_setup(spec: ArchSpec, mesh: Mesh, shape: ShapeCfg,
         topk_k=spec.coding.topk_k, k_per_block=spec.coding.k_per_block,
         block_size=spec.coding.block_size, wire_dtype=spec.coding.wire_dtype,
         ef_dtype=run.ef_dtype, phase2_dtype=run.phase2_dtype,
-        phase2_sign=run.phase2_sign, num_buckets=run.num_buckets)
+        phase2_sign=run.phase2_sign, num_buckets=run.num_buckets,
+        backend=run.backend)
 
     # device-local flat size (uniform across devices by construction);
     # padding alignment comes from the active wire format, not just the

@@ -83,6 +83,44 @@ def test_sign_decode_reduce(n_senders):
                                rtol=1e-5, atol=1e-6)
 
 
+@pytest.mark.parametrize("k,block", [(4, 128), (8, 256)])
+@pytest.mark.parametrize("mask", [0.0, 1.0])
+def test_ef_topk_fused_sweep(k, block, mask):
+    from repro.kernels.topk_pack import ef_topk_fused
+    n = 8 * block * 2
+    g = jax.random.normal(jax.random.PRNGKey(3), (n,))
+    e = jax.random.normal(jax.random.PRNGKey(4), (n,)) * 0.1
+    outs_k = ef_topk_fused(g, e, 0.01, mask, k, block, interpret=True)
+    # jit the oracle too: backend parity is a property of the compiled
+    # programs (eager evaluation reassociates the accumulate by ~1 ulp)
+    outs_r = jax.jit(lambda a, b: ref.ef_topk_fused_ref(a, b, 0.01, mask, k,
+                                                        block))(g, e)
+    for a, b in zip(outs_k, outs_r):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_ef_topk_fused_conservation():
+    """c + e_new reconstruct acc exactly (the sparse wire's fused step keeps
+    the exact kept values in c, so Algorithm 1 conserves bit-for-bit)."""
+    from repro.kernels.topk_pack import ef_topk_fused
+    n, k, block = 8 * 128, 8, 128
+    gv = jax.random.normal(jax.random.PRNGKey(5), (n,))
+    e = jax.random.normal(jax.random.PRNGKey(6), (n,)) * 0.1
+    gamma = 0.05
+    idx, val, sc, c, e_new = ef_topk_fused(gv, e, gamma, 1.0, k, block,
+                                           interpret=True)
+    # jitted accumulate — XLA contracts gamma*g + e into an FMA, so the
+    # bitwise-matching oracle must be compiled too
+    acc = np.asarray(jax.jit(lambda a, b: jnp.float32(gamma) * a + b)(gv, e))
+    np.testing.assert_array_equal(np.asarray(c) + np.asarray(e_new), acc)
+    # payload agrees with the pack-only kernel on the same acc
+    from repro.kernels.topk_pack import topk_pack
+    i2, v2, s2 = topk_pack(jnp.asarray(acc), k, block, interpret=True)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(i2))
+    np.testing.assert_array_equal(np.asarray(val), np.asarray(v2))
+    np.testing.assert_array_equal(np.asarray(sc), np.asarray(s2))
+
+
 @settings(max_examples=10, deadline=None)
 @given(seed=st.integers(0, 1000), k=st.sampled_from([4, 8, 16]),
        block=st.sampled_from([128, 256]))
