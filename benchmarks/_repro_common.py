@@ -15,6 +15,7 @@ import numpy as np
 
 from repro.core import coding, compression as C, error_feedback as EF
 from repro.data import tasks
+from repro.sim import IIDBernoulli, StragglerProcess
 
 METHODS = {
     "cocoef": EF.cocoef_step,
@@ -28,9 +29,18 @@ METHODS = {
 def run_trial(method: str, compressor, grad_fn, loss_fn, theta0, *,
               N=100, M=100, d=5, p=0.2, gamma=1e-5, T=400, seed=0,
               gamma_fn=None, record_every=20, diff_alpha=0.2,
-              eval_fns: Optional[Dict[str, Callable]] = None):
+              eval_fns: Optional[Dict[str, Callable]] = None,
+              straggler: Optional[StragglerProcess] = None):
+    """`straggler` (repro.sim.StragglerProcess) drives the per-step masks;
+    None keeps the paper's iid Bernoulli(p) — bit-for-bit the legacy
+    `coding.straggler_mask` sequence for the same seed."""
     alloc = coding.random_allocation(seed, N, M, d)
     W = coding.encode_weights(alloc, p)
+    if straggler is None:
+        straggler = IIDBernoulli(num_devices=N, p=p)
+    elif straggler.num_devices != N:
+        raise ValueError(f"straggler process has {straggler.num_devices} "
+                         f"devices, trial has N={N}")
     mask_key = jax.random.PRNGKey(1000 + seed)
     comp_key = jax.random.PRNGKey(2000 + seed)
     needs_key = compressor is not None and compressor.unbiased
@@ -53,7 +63,7 @@ def run_trial(method: str, compressor, grad_fn, loss_fn, theta0, *,
                 hist[k].append(float(np.asarray(fn(st.theta))))
 
     for t in range(T):
-        mask = coding.straggler_mask(mask_key, t, N, p)
+        mask = straggler.mask(mask_key, t)
         g = float(gamma_fn(t)) if gamma_fn else gamma
         kk = jax.random.fold_in(comp_key, t) if needs_key else None
         if method == "uncompressed":

@@ -29,20 +29,46 @@ def run():
     return rows
 
 
+WIRE_TABLE = [
+    ("sign g=512", SignWire(group_size=512)),
+    ("topk 8/512 f32", SparseWire(k_per_block=8, block_size=512)),
+    ("topk 8/512 bf16", SparseWire(k_per_block=8, block_size=512,
+                                   value_dtype="bfloat16")),
+    ("topk 32/512 f32", SparseWire(k_per_block=32, block_size=512)),
+    ("dense bf16", DenseWire(value_dtype="bfloat16")),
+    ("dense f32", DenseWire()),
+]
+
+
 def run_wires(n: int = N_MODEL):
     """(name, bytes/step/rank, compression vs dense f32) per wire format."""
-    wires = [
-        ("sign g=512", SignWire(group_size=512)),
-        ("topk 8/512 f32", SparseWire(k_per_block=8, block_size=512)),
-        ("topk 8/512 bf16", SparseWire(k_per_block=8, block_size=512,
-                                       value_dtype="bfloat16")),
-        ("topk 32/512 f32", SparseWire(k_per_block=32, block_size=512)),
-        ("dense bf16", DenseWire(value_dtype="bfloat16")),
-        ("dense f32", DenseWire()),
-    ]
     dense = DenseWire().wire_bytes(n)
     return [(name, w.wire_bytes(n), dense / w.wire_bytes(n))
-            for name, w in wires]
+            for name, w in WIRE_TABLE]
+
+
+def audit_wire_bytes(n: int = 4096):
+    """Single-source-of-truth audit: for every wire in the table,
+    `WireFormat.wire_bytes(n)` (what this table prints) must equal (a) the
+    actual byte count of the packed payload the coded collective transmits
+    and (b) the uplink accounting the sim cost model charges
+    (`repro.sim.StepTimer.bytes_up`).  Raises on any drift."""
+    import jax.numpy as jnp
+
+    from repro.sim import StepTimer
+
+    drift = []
+    for name, wire in WIRE_TABLE:
+        payload = wire.pack(jnp.zeros((n,), jnp.float32))
+        actual = sum(int(p.size) * p.dtype.itemsize for p in payload)
+        declared = int(wire.wire_bytes(n))
+        timer = StepTimer(wire=wire, n=n).bytes_up()
+        if not declared == actual == timer:
+            drift.append((name, declared, actual, timer))
+    if drift:
+        raise AssertionError(
+            f"wire_bytes drift (declared, packed, cost-model): {drift}")
+    return [name for name, _ in WIRE_TABLE]
 
 
 if __name__ == "__main__":
@@ -53,3 +79,6 @@ if __name__ == "__main__":
     for name, nbytes, ratio in run_wires():
         print(f"{name:18s} bytes/step/rank={nbytes:10d}  vs dense f32 "
               f"x{ratio:5.1f}")
+    audited = audit_wire_bytes()
+    print(f"\nwire_bytes audit OK: declared == packed-payload == cost-model "
+          f"for {len(audited)} wires")

@@ -1,11 +1,18 @@
-"""Render the final §Roofline table (markdown) from cached dry-run JSONs
-and append/replace it in EXPERIMENTS.md below the marker line."""
+"""Render the final EXPERIMENTS.md tables (markdown) from cached artifacts:
+the §Roofline table (dry-run JSONs), the §Time-to-accuracy table
+(results/repro/fig8.json — the cluster-sim sweep), and the cost-model
+step-time table (computed live from repro.sim.StepTimer, same WireFormat
+accounting the comm-volume table prints).  Each section is replaced
+in-place below its header; EXPERIMENTS.md is created when missing."""
+import json
 from pathlib import Path
 
 from benchmarks import roofline
+from benchmarks.comm_volume import N_MODEL, WIRE_TABLE
 
 MARK = "(table inserted by the final sweep — see §Roofline-table below)"
 ROOT = Path(__file__).resolve().parents[1]
+RESULTS = ROOT / "results" / "repro"
 
 
 def render():
@@ -40,19 +47,92 @@ def render():
     return "\n".join(out)
 
 
+def render_cost_model(n: int = N_MODEL):
+    """Simulated step time per wire at n coords/rank under the default link
+    profile — the cost-model analogue of the comm-volume table (both read
+    the same `WireFormat.wire_bytes`)."""
+    import numpy as np
+
+    from repro.sim import DEFAULT_COMPUTE, DEFAULT_LINK, StepTimer
+
+    lk = DEFAULT_LINK
+    out = ["", "### §Cost-model step times "
+           f"(n={n} coords/rank, default link: {lk.bandwidth_gbps:g} Gbit/s "
+           f"up / {lk.down_bandwidth_gbps:g} Gbit/s down, "
+           f"{lk.latency_s*1e3:g} ms latency, "
+           f"compute {DEFAULT_COMPUTE.grad_s*1e3:g} ms)", "",
+           "| wire | bytes up/rank | step ms (no stragglers) |",
+           "|---|---|---|"]
+    for name, wire in WIRE_TABLE:
+        t = StepTimer(wire=wire, n=n)
+        out.append(f"| {name} | {t.bytes_up():,} "
+                   f"| {t.step_time(np.ones(8)) * 1e3:.2f} |")
+    out.append("")
+    return "\n".join(out)
+
+
+def render_sim():
+    """§Time-to-accuracy table from the cached fig8 sweep (plus fig3
+    straggler-process variants when present)."""
+    fig8 = RESULTS / "fig8.json"
+    if not fig8.exists():
+        return None
+    res = json.loads(fig8.read_text())
+    out = ["", "### §Time-to-accuracy (fig8: wire x straggler process, "
+           f"simulated at n={res['meta']['n_wire']} coords/rank)", "",
+           "| straggler | method | final loss | time-to-target (s) "
+           "| GB up (total) |",
+           "|---|---|---|---|---|"]
+    for pname, curves in res["curves"].items():
+        t2t = res["summary"][pname]["time_to_target_s"]
+        for mname, c in curves.items():
+            t = t2t.get(mname)
+            t_cell = f"{t:.2f}" if t is not None else "never"
+            out.append(f"| {pname} | {mname} | {c['loss'][-1]:.1f} "
+                       f"| {t_cell} | {c['bytes_up_cum'][-1]/2**30:.2f} |")
+    out.append("")
+    for pname, s in res["summary"].items():
+        speed = s.get("sign_vs_dense_speedup")
+        if speed:
+            out.append(f"- {pname}: COCO-EF(sign) reaches the target loss "
+                       f"{speed:.2f}x sooner than dense SGC.")
+    for variant in ("markov", "hetero"):
+        f3 = RESULTS / f"fig3_{variant}.json"
+        if f3.exists():
+            r = json.loads(f3.read_text())
+            finals = "; ".join(f"{k}={v['loss'][-1]:.1f}"
+                               for k, v in r.items() if k != "meta")
+            out += ["", f"fig3[{variant}] final losses: {finals}"]
+    out.append("")
+    return "\n".join(out)
+
+
+def _replace_section(text: str, header: str, table: str) -> str:
+    """Replace everything from `header` to the next '### §' (or EOF)."""
+    if header in text:
+        head, rest = text.split(header, 1)
+        nxt = rest.find("\n### §")
+        tail = rest[nxt + 1:] if nxt >= 0 else ""
+        return head.rstrip("\n") + "\n" + table.strip("\n") + "\n" + tail
+    return text.rstrip("\n") + "\n" + table.strip("\n") + "\n"
+
+
 def main():
     exp = ROOT / "EXPERIMENTS.md"
-    text = exp.read_text()
-    table = render()
-    if "### §Roofline-table" in text:
-        head = text.split("### §Roofline-table")[0].rstrip("\n")
-        text = head + "\n" + table
-    elif MARK in text:
-        text = text.replace(MARK, MARK + "\n" + table)
-    else:
-        text += "\n" + table
+    text = exp.read_text() if exp.exists() else "# EXPERIMENTS\n"
+    if MARK in text:
+        text = text.replace(MARK, "")
+    try:
+        text = _replace_section(text, "### §Roofline-table", render())
+    except Exception as e:  # noqa: BLE001 — roofline cache may be absent
+        print(f"roofline table unavailable: {e}")
+    text = _replace_section(text, "### §Cost-model step times",
+                            render_cost_model())
+    sim = render_sim()
+    if sim is not None:
+        text = _replace_section(text, "### §Time-to-accuracy", sim)
     exp.write_text(text)
-    print(table[:1500])
+    print(text[-2500:])
 
 
 if __name__ == "__main__":

@@ -1,26 +1,63 @@
-"""Fig. 3: COCO-EF (Sign) under varying straggler probability p.
-Protocol: d_k=2, gamma=1e-5; degradation should be mild until p -> 1."""
+"""Fig. 3: COCO-EF under varying straggler probability p — generalized
+over every wire format (sign / block top-K / dense) and over the pluggable
+straggler processes of `repro.sim` (iid Bernoulli by default; pass
+`straggler="markov"|"hetero"` to exercise correlated bursts or per-rank
+heterogeneity from the same figure).
+
+Protocol: d_k=2, gamma=1e-5; degradation should be mild until p -> 1.
+
+  PYTHONPATH=src python benchmarks/fig3_straggler_sweep.py [--straggler markov]
+"""
+import argparse
 import json
 from pathlib import Path
 
 from repro.core import compression as C
+from repro.sim import get_straggler_process
 
-from . import _repro_common as R
+try:
+    from . import _repro_common as R
+except ImportError:                      # run as a script
+    import _repro_common as R
 
 OUT = Path(__file__).resolve().parents[1] / "results" / "repro"
 PS = [0.1, 0.3, 0.5, 0.7, 0.9]
 
+# wire-format sweep: (method, compressor) per wire the collective supports
+WIRES = {
+    "sign": ("cocoef", C.GroupedSign()),
+    "block_topk": ("cocoef", C.BlockTopK(k_per_block=2, block_size=20)),
+    "dense": ("uncompressed", None),
+}
 
-def run(trials=5, T=400):
+
+def run(trials=5, T=400, wires=tuple(WIRES), straggler="iid", N=100,
+        mean_burst=8.0, spread=0.5):
     res = {}
-    for p in PS:
-        res[f"p={p}"] = R.run_trials("cocoef", C.GroupedSign(), trials=trials,
-                                     d=2, p=p, gamma=1e-5, T=T)
+    for wname in wires:
+        method, comp = WIRES[wname]
+        for p in PS:
+            proc = get_straggler_process(straggler, N, p,
+                                         mean_burst=mean_burst, spread=spread)
+            res[f"{wname},p={p}"] = R.run_trials(
+                method, comp, trials=trials, N=N, M=N, d=2, p=p, gamma=1e-5,
+                T=T, straggler=proc)
+    res["meta"] = {"straggler": straggler, "wires": list(wires), "N": N}
     OUT.mkdir(parents=True, exist_ok=True)
-    (OUT / "fig3.json").write_text(json.dumps(res, indent=1))
+    suffix = "" if straggler == "iid" else f"_{straggler}"
+    (OUT / f"fig3{suffix}.json").write_text(json.dumps(res, indent=1))
     return res
 
 
 if __name__ == "__main__":
-    for k, v in run().items():
-        print(f"{k:8s} final_loss={v['loss'][-1]:.1f}")
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--straggler", default="iid",
+                    choices=["iid", "markov", "hetero"])
+    ap.add_argument("--trials", type=int, default=5)
+    ap.add_argument("--steps", type=int, default=400)
+    args = ap.parse_args()
+    out = run(trials=args.trials, T=args.steps, straggler=args.straggler)
+    for k, v in out.items():
+        if k == "meta":
+            continue
+        print(f"{k:20s} final_loss={v['loss'][-1]:.1f}")

@@ -1,0 +1,141 @@
+"""Fig. 8 (beyond-paper): time-to-accuracy under simulated cluster dynamics.
+
+The paper reports loss vs ITERATION; what actually motivates biased
+compression is loss vs WALL-CLOCK on a cluster where stragglers and
+communication both cost time.  This sweep joins the two halves of
+`repro.sim`:
+
+  dynamics — the paper's linreg protocol (Sec. V.A) trained per method
+    with a pluggable `StragglerProcess` driving the participation masks;
+  timing   — a `StepTimer` replaying the SAME mask trace through the
+    wire-aware cost model, with each method's phase-1 bytes taken from the
+    production `WireFormat` it would ship at model scale
+    (`n_wire` = 4M coords/rank, the ROADMAP comm-volume table scale).
+
+Methods: COCO-EF on the sign and sparse wires vs dense SGC [31] (coded,
+uncompressed) vs an uncoded dense baseline (d=1).  Each runs under every
+straggler process (iid Bernoulli, bursty Markov, heterogeneous rates).
+
+Emits results/repro/fig8.json: per-(process, method) (time, loss) curves,
+a bytes-on-wire ledger, and time-to-target-loss summaries.
+
+  PYTHONPATH=src python benchmarks/fig8_time_to_accuracy.py [--smoke]
+"""
+import argparse
+import dataclasses
+import json
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.core import compression as C
+from repro.core.collectives import DenseWire, SignWire, SparseWire
+from repro.sim import (DEFAULT_COMPUTE, DEFAULT_LINK, StepTimer,
+                       attach_times, get_straggler_process, simulate_run,
+                       time_to_target)
+
+try:
+    from . import _repro_common as R
+except ImportError:                      # run as a script
+    import _repro_common as R
+
+OUT = Path(__file__).resolve().parents[1] / "results" / "repro"
+
+N_WIRE = 1 << 22        # 4M coords/rank: the production wire scale the
+                        # step times are projected at (ROADMAP comm table)
+
+# method -> (EF step, trial compressor, redundancy, production wire format)
+METHODS = {
+    "cocoef_sign": ("cocoef", C.GroupedSign(), 2, SignWire(group_size=512)),
+    "cocoef_topk": ("cocoef", C.TopK(k=2), 2,
+                    SparseWire(k_per_block=8, block_size=512)),
+    "sgc_dense": ("uncompressed", None, 2, DenseWire()),
+    "uncoded_dense": ("uncompressed", None, 1, DenseWire()),
+}
+
+
+def _processes(N, p, smoke=False):
+    return {
+        "iid": get_straggler_process("iid", N, p),
+        "markov": get_straggler_process("markov", N, p,
+                                        mean_burst=4.0 if smoke else 8.0),
+        "hetero": get_straggler_process("hetero", N, p, spread=0.8),
+    }
+
+
+def run(trials=3, T=400, N=100, p=0.2, gamma=1e-5, record_every=20,
+        n_wire=N_WIRE, link=DEFAULT_LINK, compute=DEFAULT_COMPUTE,
+        smoke=False):
+    if smoke:
+        trials, T, N, record_every = 1, 60, 20, 5
+    res = {"meta": {"n_wire": n_wire, "p": p, "trials": trials, "T": T,
+                    "N": N, "gamma": gamma,
+                    "link": dataclasses.asdict(link),
+                    "compute": dataclasses.asdict(compute),
+                    "wire_bytes_up_per_rank": {
+                        name: int(w.wire_bytes(n_wire))
+                        for name, (_, _, _, w) in METHODS.items()}},
+           "curves": {}, "summary": {}}
+
+    for pname, proc in _processes(N, p, smoke=smoke).items():
+        curves = {}
+        for mname, (method, comp, d, wire) in METHODS.items():
+            timer = StepTimer(wire=wire, n=n_wire, link=link, compute=compute)
+            per_trial = []
+            for s in range(trials):
+                grad_fn, loss_fn, theta0, _ = R.tasks.linreg_task(
+                    seed=s, num_subsets=N)
+                hist = R.run_trial(method, comp, grad_fn, loss_fn, theta0,
+                                   N=N, M=N, d=d, p=p, gamma=gamma, T=T,
+                                   seed=s, record_every=record_every,
+                                   straggler=proc)
+                sim = simulate_run(proc, timer, T,
+                                   jax.random.PRNGKey(1000 + s))
+                per_trial.append(attach_times(hist, sim))
+            steps = per_trial[0]["step"]
+            curve = {"step": steps}
+            for key in ("loss", "time_s", "bytes_up_cum", "bytes_down_cum"):
+                arr = np.array([c[key] for c in per_trial])
+                curve[key] = arr.mean(0).tolist()
+                if key == "loss":
+                    curve["loss_std"] = arr.std(0).tolist()
+            curves[mname] = curve
+
+        # target: reachable by every method's mean curve (5% above the
+        # slowest-converging method's final loss)
+        target = 1.05 * max(c["loss"][-1] for c in curves.values())
+        t2t = {m: time_to_target(c["time_s"], c["loss"], target)
+               for m, c in curves.items()}
+        summary = {"target_loss": target, "time_to_target_s": t2t}
+        if t2t["cocoef_sign"] and t2t["sgc_dense"]:
+            summary["sign_vs_dense_speedup"] = \
+                t2t["sgc_dense"] / t2t["cocoef_sign"]
+        res["curves"][pname] = curves
+        res["summary"][pname] = summary
+
+    OUT.mkdir(parents=True, exist_ok=True)
+    (OUT / "fig8.json").write_text(json.dumps(res, indent=1))
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny configuration for CI (1 trial, 60 steps, "
+                         "20 ranks)")
+    ap.add_argument("--trials", type=int, default=3)
+    ap.add_argument("--steps", type=int, default=400)
+    args = ap.parse_args()
+    res = run(trials=args.trials, T=args.steps, smoke=args.smoke)
+    for pname, s in res["summary"].items():
+        t2t = ", ".join(
+            f"{m}={v:.2f}s" if v is not None else f"{m}=never"
+            for m, v in s["time_to_target_s"].items())
+        speed = s.get("sign_vs_dense_speedup")
+        print(f"{pname:8s} target={s['target_loss']:.1f}  {t2t}"
+              + (f"  sign-vs-dense x{speed:.2f}" if speed else ""))
+
+
+if __name__ == "__main__":
+    main()

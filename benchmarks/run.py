@@ -31,7 +31,8 @@ def main() -> None:
                             fig3_straggler_sweep as f3,
                             fig4_redundancy_sweep as f4,
                             fig5_ef_ablation as f5, fig6_lr_schedule as f6,
-                            fig7_classification as f7, kernel_bench)
+                            fig7_classification as f7,
+                            fig8_time_to_accuracy as f8, kernel_bench)
 
     us, d = _fig("fig2", f2.run,
                  lambda r: (f"cocoef_sign={r['cocoef_sign']['loss'][-1]:.1f}"
@@ -40,8 +41,18 @@ def main() -> None:
     rows.append(("fig2_equal_bits", us, d))
     us, d = _fig("fig3", f3.run,
                  lambda r: "|".join(f"{k}={v['loss'][-1]:.1f}"
-                                    for k, v in r.items()), 2, 200)
+                                    for k, v in r.items()
+                                    if k != "meta"), 2, 200)
     rows.append(("fig3_straggler_p", us, d))
+    # fig3 straggler-process variants (cached only — produced by
+    # `fig3_straggler_sweep.py --straggler markov|hetero`)
+    for variant in ("markov", "hetero"):
+        cached = RESULTS / "repro" / f"fig3_{variant}.json"
+        if cached.exists():
+            r = json.loads(cached.read_text())
+            rows.append((f"fig3_straggler_p[{variant}]", 0.0,
+                         "|".join(f"{k}={v['loss'][-1]:.1f}"
+                                  for k, v in r.items() if k != "meta")))
     us, d = _fig("fig4", f4.run,
                  lambda r: "|".join(f"{k}={v['loss'][-1]:.1f}"
                                     for k, v in r.items()), 2, 200)
@@ -60,6 +71,20 @@ def main() -> None:
                                     for k, v in r.items()
                                     if not k.endswith("_std")), 1, 100)
     rows.append(("fig7_heterogeneous_cls", us, d))
+
+    def _fig8_headline(r):
+        parts = []
+        for pname, s in r["summary"].items():
+            t = s["time_to_target_s"]
+            sign, dense = t.get("cocoef_sign"), t.get("sgc_dense")
+            parts.append(f"{pname}:sign={sign:.2f}s" if sign is not None
+                         else f"{pname}:sign=never")
+            if sign is not None and dense is not None:
+                parts[-1] += f"|dense={dense:.2f}s|x{dense / sign:.2f}"
+        return "|".join(parts)
+
+    us, d = _fig("fig8", f8.run, _fig8_headline, trials=1, T=120)
+    rows.append(("fig8_time_to_accuracy", us, d))
 
     for name, bits, ratio in comm_volume.run():
         rows.append((f"comm_volume[{name}]", 0.0,

@@ -37,6 +37,16 @@ def main():
                     choices=["auto", "pallas", "jnp"],
                     help="fused-kernel dispatch for the wire hot path "
                          "(auto = Pallas on TPU, jnp reference elsewhere)")
+    ap.add_argument("--straggler", default="iid",
+                    choices=["iid", "markov", "hetero", "trace"],
+                    help="straggler process driving the per-step "
+                         "participation masks (repro.sim)")
+    ap.add_argument("--straggler-p", type=float, default=None,
+                    help="override the arch's Bernoulli/stationary "
+                         "straggle probability")
+    ap.add_argument("--straggler-trace", default=None,
+                    help="recorded-mask JSON for --straggler trace "
+                         "(default: synthesize a bursty trace and save it)")
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_e2e_ckpt")
     args = ap.parse_args()
@@ -45,17 +55,38 @@ def main():
     mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
     shape = ShapeCfg("train", seq_len=64, global_batch=16)
     spec = REGISTRY[args.arch]
+    coding_over = dict(group_size=32, block_size=64, k_per_block=8)
+    if args.straggler_p is not None:
+        coding_over["straggler_p"] = args.straggler_p
     spec = dataclasses.replace(
-        spec, coding=dataclasses.replace(spec.coding, group_size=32,
-                                         block_size=64, k_per_block=8))
+        spec, coding=dataclasses.replace(spec.coding, **coding_over))
+
+    trace_path = args.straggler_trace
+    if args.straggler == "trace" and trace_path is None:
+        # synthesize a bursty incident trace for the demo and replay it
+        from repro.sim import MarkovBursty, TraceReplay
+        n_code = 4    # pod x data of the mesh below
+        p = spec.coding.straggler_p
+        if args.straggler_p is None and p == 0:
+            p = 0.2   # demo default; an explicit --straggler-p 0.0 stands
+        proc = MarkovBursty(num_devices=n_code, p=p, mean_burst=6.0)
+        trace = TraceReplay.from_array(
+            proc.sample_trace(jax.random.PRNGKey(42), 128))
+        trace_path = str(trace.to_json("/tmp/repro_e2e_trace.json"))
+        print(f"synthesized bursty trace -> {trace_path}")
+
     setup = build_train_setup(spec, mesh, shape,
                               TrainRun(base_lr=5e-3, mode="cocoef",
                                        compressor=args.compressor,
                                        num_buckets=args.num_buckets,
-                                       backend=args.backend),
+                                       backend=args.backend,
+                                       straggler=args.straggler,
+                                       straggler_trace=trace_path),
                               smoke=True)
+    proc = setup.straggler_process
     print(f"arch={args.arch} coding ranks={setup.n_code} "
-          f"per-rank batch={setup.b_loc} local flat={setup.flat_pad}")
+          f"per-rank batch={setup.b_loc} local flat={setup.flat_pad} "
+          f"straggler={type(proc).__name__ if proc else 'none'}")
 
     key = jax.random.PRNGKey(0)
     params, e, opt = setup.init_state(key)

@@ -27,7 +27,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import List, Sequence, Tuple
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -161,14 +161,22 @@ def _joined(parts: List[jnp.ndarray]) -> jnp.ndarray:
 
 
 def cocoef_update(g_local: jnp.ndarray, e_local: jnp.ndarray,
-                  mask: jnp.ndarray, gamma, cfg: CocoEFConfig
-                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+                  mask: Optional[jnp.ndarray], gamma, cfg: CocoEFConfig,
+                  *, mask_provider: Optional[Callable] = None,
+                  key: Optional[jnp.ndarray] = None,
+                  step=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """One Algorithm-1 update on the device-local flat slice.
 
     g_local: (n,) local slice of this coding rank's coded gradient.
     e_local: (n,) local slice of this rank's error vector (cfg.ef_dtype).
-    mask:    (n_coding,) straggler indicators I_i^t (same on all devices).
+    mask:    (n_coding,) straggler indicators I_i^t (same on all devices);
+             may be None when `mask_provider` is given.
     gamma:   scalar learning rate (may be traced — lr schedules).
+    mask_provider: optional hook `(key, step) -> (n_coding,) mask` — any
+             `repro.sim.StragglerProcess.mask` qualifies.  Must be pure in
+             (key, step) so every coding rank derives the identical mask
+             without communication; called here (inside the shard_map /
+             jit scope), with `key`/`step` threaded through.
     Returns (ghat_local, new_e_local); ghat is sum_i mask_i C_or_id(acc_i),
     already scaled by gamma per eq. (4): apply as  params -= ghat.
 
@@ -176,6 +184,10 @@ def cocoef_update(g_local: jnp.ndarray, e_local: jnp.ndarray,
     `wire.fused_local_step` produces payload + new error in one pass over
     g/e (cocoef), and coco/dense never materialize the reconstruction c.
     """
+    if mask is None:
+        if mask_provider is None:
+            raise ValueError("need a mask or a mask_provider hook")
+        mask = mask_provider(key, step)
     coll = cfg.collective()
     my_idx = coding_rank_index(cfg.coding_axes)
     my_mask = lax.dynamic_index_in_dim(mask, my_idx, keepdims=False)

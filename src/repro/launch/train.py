@@ -40,6 +40,7 @@ from repro.nn import Model
 from repro.optim import OptimizerConfig, apply_update, init_opt_state, \
     lr_schedule
 from repro.sharding import ctx, rules
+from repro.sim import stragglers
 
 __all__ = ["TrainRun", "build_train_setup"]
 
@@ -57,6 +58,10 @@ class TrainRun:
     phase2_sign: bool = False
     num_buckets: int = 1
     backend: str = "auto"            # auto | pallas | jnp kernel dispatch
+    straggler: str = "iid"           # iid | markov | hetero | trace
+    straggler_burst: float = 8.0     # markov: mean slow-burst length (steps)
+    straggler_spread: float = 0.5    # hetero: p_i in p*(1 +/- spread)
+    straggler_trace: Optional[str] = None  # trace: recorded-mask JSON path
     seed: int = 0
     aux_weight: float = 0.01
     param_dtype: Optional[str] = None   # override cfg (e.g. "bfloat16")
@@ -82,6 +87,7 @@ class TrainSetup:
     init_state: Any                  # (key) -> (params, e, opt) real arrays
     allocation: coding.Allocation
     cocoef_cfg: CocoEFConfig
+    straggler_process: Optional[stragglers.StragglerProcess] = None
 
 
 def _local_flat_size(shapes_tree, specs_tree, mesh: Mesh) -> int:
@@ -160,6 +166,15 @@ def build_train_setup(spec: ArchSpec, mesh: Mesh, shape: ShapeCfg,
     flat_pad = padded_size(loc, nd_chunk, cocoef_cfg.pad_multiple,
                            run.num_buckets)
 
+    # straggler process feeding the mask-provider hook (repro.sim): the
+    # legacy fast path (iid with p=0 -> all-ones mask, no PRNG work) is
+    # preserved by constructing no process at all in that case
+    straggler_proc = None
+    if n_code > 1 and (run.straggler != "iid" or p_strag > 0):
+        straggler_proc = stragglers.get_straggler_process(
+            run.straggler, n_code, p_strag, mean_burst=run.straggler_burst,
+            spread=run.straggler_spread, trace=run.straggler_trace)
+
     mesh_shape = tuple(mesh.devices.shape)
     state_shape = mesh_shape + (flat_pad,)
     state_spec = P(*mesh.axis_names, None)
@@ -212,10 +227,11 @@ def build_train_setup(spec: ArchSpec, mesh: Mesh, shape: ShapeCfg,
         opt_loc = tuple(o.reshape(-1) for o in opt)
 
         gamma = gamma_fn(step)
-        mask = coding.straggler_mask(key, step, max(n_code, 1), p_strag) \
-            if p_strag > 0 else jnp.ones((max(n_code, 1),), jnp.float32)
+        mask_fn = straggler_proc.mask if straggler_proc is not None else \
+            (lambda k, s: jnp.ones((max(n_code, 1),), jnp.float32))
 
-        ghat, e_new = cocoef_update(g_flat, e_loc, mask, gamma, cocoef_cfg)
+        ghat, e_new = cocoef_update(g_flat, e_loc, None, gamma, cocoef_cfg,
+                                    mask_provider=mask_fn, key=key, step=step)
         p_new_flat, opt_new = apply_update(run.optimizer, p_flat, ghat,
                                            opt_loc, step, gamma)
         new_leaves = unflatten_local(p_new_flat, p_meta)
@@ -319,7 +335,8 @@ def build_train_setup(spec: ArchSpec, mesh: Mesh, shape: ShapeCfg,
         param_shardings=pshard, grads_shardings=gshard,
         state_sharding=state_sharding, batch_shardings=batch_shardings,
         train_step=train_step, input_specs=input_specs, init_state=init_state,
-        allocation=alloc, cocoef_cfg=cocoef_cfg)
+        allocation=alloc, cocoef_cfg=cocoef_cfg,
+        straggler_process=straggler_proc)
 
 
 def make_batch_for_step(setup: TrainSetup, spec: ArchSpec, shape: ShapeCfg,

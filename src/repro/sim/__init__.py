@@ -1,0 +1,30 @@
+"""Cluster simulation subsystem: straggler processes + wall-clock cost model.
+
+Two halves (ISSUE 3 / ROADMAP Notes):
+
+  repro.sim.stragglers — pluggable `StragglerProcess` generators of the
+    per-step participation masks I^t (iid Bernoulli, bursty Markov,
+    heterogeneous per-rank rates, recorded-trace replay).  The training
+    path consumes them through the mask-provider hook of
+    `repro.core.cocoef.cocoef_update` / `repro.launch.train.TrainRun`.
+
+  repro.sim.cost_model / repro.sim.simulate — `StepTimer` composes per-rank
+    compute, wire bytes (straight from `WireFormat.wire_bytes`) over a
+    configurable link, and the straggler cutoff into simulated step times;
+    `simulate_run` converts any benchmark trial into (time, loss) curves
+    and a bytes-on-wire ledger (benchmarks/fig8_time_to_accuracy.py).
+"""
+from .cost_model import (DEFAULT_COMPUTE, DEFAULT_LINK, ComputeProfile,
+                         LinkProfile, StepTimer)
+from .simulate import SimRun, attach_times, simulate_run, time_to_target
+from .stragglers import (STRAGGLER_PROCESSES, HeterogeneousRates,
+                         IIDBernoulli, MarkovBursty, StragglerProcess,
+                         TraceReplay, get_straggler_process)
+
+__all__ = [
+    "StragglerProcess", "IIDBernoulli", "MarkovBursty", "HeterogeneousRates",
+    "TraceReplay", "get_straggler_process", "STRAGGLER_PROCESSES",
+    "LinkProfile", "ComputeProfile", "StepTimer", "DEFAULT_LINK",
+    "DEFAULT_COMPUTE", "SimRun", "simulate_run", "attach_times",
+    "time_to_target",
+]

@@ -1,0 +1,165 @@
+"""Wire-aware wall-clock cost model for one coded-training step.
+
+The paper's device -> server -> device exchange (repro.core.collectives)
+has three legs per step, and each leg's simulated duration comes straight
+from the quantities the runtime actually uses:
+
+  compute   per-rank local gradient time: a measured-or-flops-derived base
+            seconds x a per-rank speed factor (heterogeneous fleets).
+  phase 1   each participating rank uplinks its packed payload of
+            `wire.wire_bytes(n)` bytes — the SAME accounting the comm-volume
+            tables print and the collective transmits (single source of
+            truth in `WireFormat`); an optional server fan-in serializes
+            ingest into ceil(P / fanin) waves.
+  phase 2   the aggregated dense chunk is broadcast back
+            (n x phase2 itemsize bytes) over the downlink.
+
+The step completes when the server has heard from every PARTICIPANT — the
+straggler cutoff: masked-out ranks are dropped by the coded aggregation and
+never extend the step (that is the point of the redundancy).  So
+
+  t_step(mask) = max_{i: mask_i=1} t_comp_i + waves * t_up + t_down .
+
+`StepTimer.steps(trace)` vectorizes this over a (T, N) mask trace and also
+returns the bytes-on-wire ledger, which `repro.sim.simulate` joins with
+recorded loss curves into time-to-accuracy data.
+
+The default link profile is an edge/WAN-flavored cluster (the heterogeneous
+setting that motivates gradient coding): 10 Gbit/s uplinks, a 100 Gbit/s
+effective broadcast tree down, 1 ms message latency, unbounded fan-in.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.collectives import WireFormat
+
+__all__ = ["LinkProfile", "ComputeProfile", "StepTimer", "DEFAULT_LINK",
+           "DEFAULT_COMPUTE"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkProfile:
+    """Per-rank link: bandwidth + latency (+ optional server fan-in).
+
+    bandwidth_gbps: uplink Gbit/s per rank (phase-1 payload).
+    down_bandwidth_gbps: downlink Gbit/s for the phase-2 broadcast; None =
+      same as uplink.  Server broadcast usually rides a multicast/reduce
+      tree, hence the faster default.
+    latency_s: fixed per-message latency (one per leg).
+    server_fanin: how many uplinks the server ingests concurrently;
+      0 = unbounded (full bisection), f > 0 serializes P participants into
+      ceil(P / f) transfer waves.
+    """
+
+    bandwidth_gbps: float = 10.0
+    down_bandwidth_gbps: Optional[float] = 100.0
+    latency_s: float = 1e-3
+    server_fanin: int = 0
+
+    def up_s(self, nbytes: int) -> float:
+        return self.latency_s + nbytes * 8.0 / (self.bandwidth_gbps * 1e9)
+
+    def down_s(self, nbytes: int) -> float:
+        bw = self.down_bandwidth_gbps or self.bandwidth_gbps
+        return self.latency_s + nbytes * 8.0 / (bw * 1e9)
+
+
+@dataclasses.dataclass(frozen=True)
+class ComputeProfile:
+    """Per-rank local-gradient time = base seconds x per-rank speed factor.
+
+    grad_s: base seconds for one local coded gradient (measured, or derive
+      via `from_flops`).
+    speed_factors: per-rank multiplier (>= 1 = slower rank); () = all 1.0.
+    """
+
+    grad_s: float = 5e-3
+    speed_factors: Tuple[float, ...] = ()
+
+    @classmethod
+    def from_flops(cls, flops_per_step: float, device_flops: float = 1e14,
+                   mfu: float = 0.4, speed_factors: Tuple[float, ...] = ()
+                   ) -> "ComputeProfile":
+        """Derive the base compute time from a flop count and device peak."""
+        return cls(grad_s=flops_per_step / (device_flops * mfu),
+                   speed_factors=speed_factors)
+
+    def rank_seconds(self, num_devices: int) -> np.ndarray:
+        if not self.speed_factors:
+            return np.full((num_devices,), self.grad_s)
+        if len(self.speed_factors) != num_devices:
+            raise ValueError(f"need {num_devices} speed factors, got "
+                             f"{len(self.speed_factors)}")
+        return self.grad_s * np.asarray(self.speed_factors, np.float64)
+
+
+DEFAULT_LINK = LinkProfile()
+DEFAULT_COMPUTE = ComputeProfile()
+
+
+@dataclasses.dataclass(frozen=True)
+class StepTimer:
+    """Simulated wall-clock + bytes ledger for one coded step.
+
+    wire: the phase-1 `WireFormat` (bytes via `wire.wire_bytes(n)` — the
+      single source of truth shared with benchmarks/comm_volume.py).
+    n: flat coords per rank on the wire (the padded local gradient size).
+    phase2_itemsize: bytes/coord of the aggregated broadcast (4 = the
+      paper-faithful f32 server broadcast, 2 = bf16 beyond-paper option).
+    """
+
+    wire: WireFormat
+    n: int
+    link: LinkProfile = DEFAULT_LINK
+    compute: ComputeProfile = DEFAULT_COMPUTE
+    phase2_itemsize: int = 4
+
+    def bytes_up(self) -> int:
+        """Phase-1 payload bytes for one rank — `wire.wire_bytes(n)`."""
+        return int(self.wire.wire_bytes(self.n))
+
+    def bytes_down(self) -> int:
+        """Phase-2 broadcast bytes received by one rank."""
+        return self.n * self.phase2_itemsize
+
+    def _waves(self, participants: np.ndarray) -> np.ndarray:
+        f = self.link.server_fanin
+        if f <= 0:
+            return np.ones_like(participants, dtype=np.float64)
+        return np.ceil(participants / f)
+
+    def step_time(self, mask: Sequence[float]) -> float:
+        """Seconds for one step under participation mask (N,)."""
+        t, _, _ = self.steps(np.asarray(mask)[None, :])
+        return float(t[0])
+
+    def steps(self, trace: np.ndarray
+              ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Vectorized over a (T, N) mask trace.
+
+        Returns (step_time_s (T,), bytes_up (T,), bytes_down (T,)):
+        per-step seconds, total uplink bytes (participants x payload), and
+        total downlink bytes (every rank receives the broadcast).
+        """
+        trace = np.asarray(trace, np.float64)
+        T, N = trace.shape
+        comp = self.compute.rank_seconds(N)                    # (N,)
+        participants = trace.sum(axis=1)                       # (T,)
+        # slowest participating rank; an all-straggler step still burns the
+        # full compute window (the server times out waiting)
+        t_comp = np.where(participants > 0,
+                          np.max(np.where(trace > 0, comp[None, :], 0.0),
+                                 axis=1),
+                          comp.max())
+        t_up = np.where(participants > 0,
+                        self._waves(participants) *
+                        self.link.up_s(self.bytes_up()), 0.0)
+        t_down = self.link.down_s(self.bytes_down())
+        times = t_comp + t_up + t_down
+        bytes_up = participants * self.bytes_up()
+        bytes_down = np.full((T,), float(N * self.bytes_down()))
+        return times, bytes_up, bytes_down

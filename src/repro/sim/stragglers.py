@@ -1,0 +1,299 @@
+"""Pluggable straggler processes: per-step participation masks I^t.
+
+The repo's seed straggler model is the iid Bernoulli coin flip of eq. (8)
+(`repro.core.coding.straggler_mask`).  Real clusters are not iid: devices go
+slow in *bursts* (thermal throttling, co-tenant interference), different
+devices have persistently different speeds (heterogeneous fleets, Song &
+Choi 2021), and recorded incidents should be replayable.  A
+`StragglerProcess` abstracts all of these behind one contract:
+
+  mask(key, step) -> (N,) f32 in {0,1}   1 = device participates this step.
+
+`mask` is a PURE function of `(key, step)` — exactly the property the
+training path relies on (every mesh rank / host derives the same mask from
+the threaded `jax.random` key without communication, and the call is
+jit-traceable with `step` a traced scalar).  Processes with temporal state
+(MarkovBursty) realize it through common randomness: the per-step uniforms
+u_s = U(fold_in(key, s)) are shared between adjacent steps' lookback
+windows, so masks at different steps are jointly distributed as the chain.
+
+Implementations:
+
+  IIDBernoulli        wraps the legacy eq.-(8) model BIT-FOR-BIT.
+  MarkovBursty        per-rank two-state (fast/slow) Markov chain:
+                      geometric slow bursts of configurable mean length,
+                      stationary straggle probability p.
+  HeterogeneousRates  independent Bernoulli with per-rank p_i (linear or
+                      two-class speed profiles, or explicit rates).
+  TraceReplay         deterministic masks replayed from a recorded JSON
+                      trace (cyclic beyond the trace length).
+
+`sample_trace(key, T)` materializes the host-side (T, N) mask matrix the
+simulation/cost-model layer consumes; it is definitionally
+`[mask(key, t) for t in range(T)]`, so simulated wall-clock time and the
+training dynamics always see the SAME mask sequence.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from functools import cached_property
+from pathlib import Path
+from typing import Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core import coding
+
+__all__ = [
+    "StragglerProcess",
+    "IIDBernoulli",
+    "MarkovBursty",
+    "HeterogeneousRates",
+    "TraceReplay",
+    "get_straggler_process",
+    "STRAGGLER_PROCESSES",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class StragglerProcess:
+    """Base class; subclasses are frozen dataclasses => valid static args."""
+
+    num_devices: int
+
+    def mask(self, key: jax.Array, step) -> jnp.ndarray:
+        """(N,) f32 participation indicators; pure in (key, step)."""
+        raise NotImplementedError
+
+    def rates(self) -> np.ndarray:
+        """(N,) marginal participation probability per rank (1 - p_i)."""
+        raise NotImplementedError
+
+    def sample_trace(self, key: jax.Array, T: int) -> np.ndarray:
+        """(T, N) float 0/1 masks — the exact sequence training would see.
+
+        Definitionally `[mask(key, t) for t in range(T)]` (vmapped), so the
+        cost model and the optimizer dynamics are driven by identical masks.
+        """
+        steps = jnp.arange(T, dtype=jnp.int32)
+        tr = jax.vmap(lambda s: self.mask(key, s))(steps)
+        return np.asarray(tr)
+
+
+@dataclasses.dataclass(frozen=True)
+class IIDBernoulli(StragglerProcess):
+    """The paper's eq.-(8) model: each device independently straggles with
+    probability p each step.  Delegates to the legacy
+    `coding.straggler_mask`, so masks are bit-for-bit identical to the
+    pre-subsystem training path for the same (key, step)."""
+
+    p: float = 0.0
+
+    def mask(self, key, step):
+        return coding.straggler_mask(key, step, self.num_devices, self.p)
+
+    def rates(self):
+        return np.full((self.num_devices,), 1.0 - self.p)
+
+
+@dataclasses.dataclass(frozen=True)
+class MarkovBursty(StragglerProcess):
+    """Per-rank two-state Markov chain: slow periods arrive in geometric
+    bursts (mean length `mean_burst`), stationary straggle probability `p`.
+
+    Transition probabilities: exit q = 1/mean_burst (slow -> fast), entry
+    r = p*q/(1-p) (fast -> slow), so P_stationary(slow) = r/(r+q) = p and
+    slow-run lengths are Geometric(q) with mean 1/q.
+
+    Purity in (key, step) uses the monotone-coupling collapse: with the
+    shared uniforms u_s = U(fold_in(key, s)) and r <= 1-q, the event
+    {u_s < r} forces slow and {u_s >= 1-q} forces fast REGARDLESS of the
+    previous state, so the chain state at `step` is determined by the last
+    coalescing event in a lookback window of `window` steps (seeded with a
+    stationary draw at the window's far edge).  Adjacent steps share their
+    uniforms, so the joint law across steps is the chain's; the truncated
+    pre-window memory contributes O((1-q-r)^window) total-variation error
+    (~2e-4 at the defaults).
+    """
+
+    p: float = 0.1
+    mean_burst: float = 8.0
+    window: int = 64
+
+    def __post_init__(self):
+        if not 0.0 <= self.p < 1.0:
+            raise ValueError(f"stationary straggle p={self.p} not in [0, 1)")
+        if self.mean_burst < 1.0:
+            raise ValueError("mean_burst must be >= 1 step")
+        q, r = self._qr()
+        if r > 1.0 - q:
+            raise ValueError(
+                f"entry rate r={r:.3f} > 1-q={1-q:.3f}: burst too short for "
+                f"this straggle probability (raise mean_burst or lower p)")
+
+    def _qr(self) -> Tuple[float, float]:
+        q = 1.0 / self.mean_burst
+        r = self.p * q / (1.0 - self.p) if self.p > 0 else 0.0
+        return q, r
+
+    def mask(self, key, step):
+        n, w = self.num_devices, self.window
+        q, r = self._qr()
+        t = jnp.asarray(step, jnp.int32)
+        # shared per-step uniforms for the lookback window t-w+1 .. t
+        # (negative steps wrap through uint32 — a consistent virtual past,
+        # so the chain is stationary from step 0)
+        steps = (t - (w - 1) + jnp.arange(w, dtype=jnp.int32)).astype(
+            jnp.uint32)
+        u = jax.vmap(lambda s: jax.random.uniform(
+            jax.random.fold_in(key, s), (n,)))(steps)          # (w, n)
+        # stationary seed at the window's far edge (distinct fold stream)
+        seed_key = jax.random.fold_in(jax.random.fold_in(key, steps[0]),
+                                      jnp.uint32(0x5EED))
+        slow0 = jax.random.uniform(seed_key, (n,)) < self.p
+
+        def chain(slow, u_row):
+            thr = jnp.where(slow, 1.0 - q, r)
+            return u_row < thr, None
+
+        slow, _ = lax.scan(chain, slow0, u)
+        return (~slow).astype(jnp.float32)
+
+    def rates(self):
+        return np.full((self.num_devices,), 1.0 - self.p)
+
+
+def _linear_rates(num_devices: int, p: float, spread: float) -> Tuple[float, ...]:
+    """Per-rank straggle probabilities p_i = p * (1 +/- spread), linearly
+    spaced rank 0 (fastest) -> rank N-1 (slowest), clipped to [0, 0.99]."""
+    lo, hi = p * (1.0 - spread), p * (1.0 + spread)
+    ps = np.clip(np.linspace(lo, hi, max(num_devices, 1)), 0.0, 0.99)
+    return tuple(float(x) for x in ps)
+
+
+@dataclasses.dataclass(frozen=True)
+class HeterogeneousRates(StragglerProcess):
+    """Independent Bernoulli stragglers with per-rank probability p_i —
+    persistent speed heterogeneity (slow edge devices straggle often, fast
+    ones rarely), the fleet model of Song & Choi 2021."""
+
+    p_ranks: Tuple[float, ...] = ()
+
+    def __post_init__(self):
+        if len(self.p_ranks) != self.num_devices:
+            raise ValueError(f"need {self.num_devices} per-rank rates, got "
+                             f"{len(self.p_ranks)}")
+        if any(not 0.0 <= p < 1.0 for p in self.p_ranks):
+            raise ValueError("every p_i must be in [0, 1)")
+
+    @classmethod
+    def linear(cls, num_devices: int, p: float,
+               spread: float = 0.5) -> "HeterogeneousRates":
+        """Linear speed profile around mean straggle probability p."""
+        return cls(num_devices=num_devices,
+                   p_ranks=_linear_rates(num_devices, p, spread))
+
+    @classmethod
+    def two_class(cls, num_devices: int, p_slow: float, p_fast: float = 0.0,
+                  slow_fraction: float = 0.25) -> "HeterogeneousRates":
+        """A slow minority (first ceil(f*N) ranks) in a fast fleet."""
+        n_slow = int(np.ceil(slow_fraction * num_devices))
+        ps = (p_slow,) * n_slow + (p_fast,) * (num_devices - n_slow)
+        return cls(num_devices=num_devices, p_ranks=ps)
+
+    def mask(self, key, step):
+        k = jax.random.fold_in(key, jnp.asarray(step, dtype=jnp.uint32))
+        pv = jnp.asarray(self.p_ranks, jnp.float32)
+        return (jax.random.uniform(k, (self.num_devices,)) >= pv).astype(
+            jnp.float32)
+
+    def rates(self):
+        return 1.0 - np.asarray(self.p_ranks, np.float64)
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceReplay(StragglerProcess):
+    """Deterministic replay of a recorded mask trace — the PRNG key is
+    ignored, so every device/host/step derives the identical mask from the
+    trace alone.  Steps beyond the trace length wrap around (cyclic)."""
+
+    masks: Tuple[Tuple[int, ...], ...] = ()
+
+    def __post_init__(self):
+        if not self.masks:
+            raise ValueError("empty trace")
+        if any(len(row) != self.num_devices for row in self.masks):
+            raise ValueError("every trace row must have num_devices entries")
+        if any(m not in (0, 1) for row in self.masks for m in row):
+            raise ValueError("trace entries must be 0/1")
+
+    @cached_property
+    def _arr(self) -> jnp.ndarray:
+        return jnp.asarray(self.masks, jnp.float32)
+
+    @property
+    def length(self) -> int:
+        return len(self.masks)
+
+    def mask(self, key, step):
+        t = jnp.asarray(step, jnp.int32) % self.length
+        return lax.dynamic_index_in_dim(self._arr, t, keepdims=False)
+
+    def rates(self):
+        return np.asarray(self.masks, np.float64).mean(axis=0)
+
+    @classmethod
+    def from_array(cls, masks) -> "TraceReplay":
+        arr = np.asarray(masks)
+        return cls(num_devices=arr.shape[1],
+                   masks=tuple(tuple(int(v) for v in row) for row in arr))
+
+    @classmethod
+    def from_json(cls, path: Union[str, Path]) -> "TraceReplay":
+        obj = json.loads(Path(path).read_text())
+        return cls.from_array(obj["masks"])
+
+    def to_json(self, path: Union[str, Path]) -> Path:
+        path = Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(
+            {"num_devices": self.num_devices,
+             "masks": [list(row) for row in self.masks]}))
+        return path
+
+
+STRAGGLER_PROCESSES = ("iid", "markov", "hetero", "trace")
+
+
+def get_straggler_process(name: str, num_devices: int, p: float = 0.0, *,
+                          mean_burst: float = 8.0, spread: float = 0.5,
+                          trace: Optional[Union[str, Path]] = None,
+                          ) -> StragglerProcess:
+    """Name-based registry (the `--straggler` CLI surface).
+
+    iid     IIDBernoulli(p)                  — legacy eq. (8), bit-for-bit
+    markov  MarkovBursty(p, mean_burst)      — correlated slow bursts
+    hetero  HeterogeneousRates.linear(p, spread) — per-rank p_i profile
+    trace   TraceReplay.from_json(trace)     — recorded masks
+    """
+    if name == "iid":
+        return IIDBernoulli(num_devices=num_devices, p=p)
+    if name == "markov":
+        return MarkovBursty(num_devices=num_devices, p=p,
+                            mean_burst=mean_burst)
+    if name == "hetero":
+        return HeterogeneousRates.linear(num_devices, p, spread)
+    if name == "trace":
+        if trace is None:
+            raise ValueError("straggler='trace' needs a trace JSON path")
+        proc = TraceReplay.from_json(trace)
+        if proc.num_devices != num_devices:
+            raise ValueError(f"trace has {proc.num_devices} devices, the run "
+                             f"has {num_devices}")
+        return proc
+    raise KeyError(f"unknown straggler process {name!r}; "
+                   f"have {STRAGGLER_PROCESSES}")
