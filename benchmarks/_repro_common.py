@@ -6,7 +6,9 @@ Bernoulli stragglers, 5 independent trials, mean +/- std reporting.
 """
 from __future__ import annotations
 
+import os
 import time
+from pathlib import Path
 from typing import Callable, Dict, List, Optional
 
 import jax
@@ -16,6 +18,15 @@ import numpy as np
 from repro.core import coding, compression as C, error_feedback as EF
 from repro.data import tasks
 from repro.sim import IIDBernoulli, StragglerProcess
+
+
+def results_dir() -> Path:
+    """Benchmark artifact root: $REPRO_RESULTS_DIR (CI / scratch runs) or
+    the in-repo default <repo>/results/repro (gitignored)."""
+    env = os.environ.get("REPRO_RESULTS_DIR")
+    if env:
+        return Path(env)
+    return Path(__file__).resolve().parents[1] / "results" / "repro"
 
 METHODS = {
     "cocoef": EF.cocoef_step,
@@ -30,17 +41,30 @@ def run_trial(method: str, compressor, grad_fn, loss_fn, theta0, *,
               N=100, M=100, d=5, p=0.2, gamma=1e-5, T=400, seed=0,
               gamma_fn=None, record_every=20, diff_alpha=0.2,
               eval_fns: Optional[Dict[str, Callable]] = None,
-              straggler: Optional[StragglerProcess] = None):
+              straggler: Optional[StragglerProcess] = None,
+              rate_aware: bool = False,
+              allocation: Optional[coding.Allocation] = None):
     """`straggler` (repro.sim.StragglerProcess) drives the per-step masks;
     None keeps the paper's iid Bernoulli(p) — bit-for-bit the legacy
-    `coding.straggler_mask` sequence for the same seed."""
-    alloc = coding.random_allocation(seed, N, M, d)
-    W = coding.encode_weights(alloc, p)
+    `coding.straggler_mask` sequence for the same seed.
+
+    `rate_aware=True` builds the encode weights from the straggler
+    process's per-rank rates q_i (unbiased under non-iid participation)
+    instead of the scalar mean rate p (eq. 3; identical for uniform rates).
+    `allocation` overrides the paper's uniform random allocation (e.g.
+    `coding.rate_aware_allocation` for heterogeneity-aware redundancy)."""
+    alloc = allocation if allocation is not None else \
+        coding.random_allocation(seed, N, M, d)
+    if alloc.num_devices != N or alloc.num_subsets != M:
+        raise ValueError(f"allocation is {alloc.S.shape}, trial wants "
+                         f"(N={N}, M={M})")
     if straggler is None:
         straggler = IIDBernoulli(num_devices=N, p=p)
     elif straggler.num_devices != N:
         raise ValueError(f"straggler process has {straggler.num_devices} "
                          f"devices, trial has N={N}")
+    W = (coding.encode_weights(alloc, rates=np.asarray(straggler.rates()))
+         if rate_aware else coding.encode_weights(alloc, p))
     mask_key = jax.random.PRNGKey(1000 + seed)
     comp_key = jax.random.PRNGKey(2000 + seed)
     needs_key = compressor is not None and compressor.unbiased
@@ -111,3 +135,46 @@ def run_trials(method: str, compressor, task="linreg", trials=5,
 
 def final(curve, key="loss"):
     return curve[key][-1]
+
+
+def summarize_trials(per_trial,
+                     keys=("loss", "time_s", "bytes_up_cum",
+                           "bytes_down_cum")):
+    """Mean the per-trial joined histories (run_trial + attach_times) into
+    one curve dict; loss also gets a std column.  Shared by the
+    time-axis sweeps (fig8 / fig9) so the averaging convention cannot
+    drift between figures."""
+    curve = {"step": per_trial[0]["step"]}
+    for key in keys:
+        arr = np.array([c[key] for c in per_trial])
+        curve[key] = arr.mean(0).tolist()
+        if key == "loss":
+            curve["loss_std"] = arr.std(0).tolist()
+    return curve
+
+
+def target_and_t2t(curves, margin=1.05):
+    """The shared target-loss convention: `margin` above the
+    slowest-converging method's final mean loss (reachable by every
+    curve), plus each method's time-to-target."""
+    from repro.sim import time_to_target
+    target = margin * max(c["loss"][-1] for c in curves.values())
+    return target, {m: time_to_target(c["time_s"], c["loss"], target)
+                    for m, c in curves.items()}
+
+
+def hetero_spread(p: float, spread: float) -> float:
+    """Largest spread <= `spread` keeping every p_i = p*(1 +/- s) inside
+    [0, 1) — the registry now validates the profile instead of silently
+    clipping it, so sweeps over p must shrink the spread at the edges."""
+    if p <= 0.0:
+        return min(spread, 1.0)
+    return min(spread, 1.0, 0.99 * (1.0 - p) / p)
+
+
+def markov_burst(p: float, mean_burst: float) -> float:
+    """Smallest feasible mean burst >= `mean_burst` for stationary straggle
+    probability p: the two-state chain needs its entry rate
+    r = p*q/(1-p) <= 1-q (q = 1/mean_burst), i.e. mean_burst >= 1/(1-p) —
+    sweeps over p must lengthen the burst at the high end."""
+    return max(mean_burst, 1.0 / (1.0 - p) + 1e-9)

@@ -52,7 +52,11 @@ def audit_wire_bytes(n: int = 4096):
     `WireFormat.wire_bytes(n)` (what this table prints) must equal (a) the
     actual byte count of the packed payload the coded collective transmits
     and (b) the uplink accounting the sim cost model charges
-    (`repro.sim.StepTimer.bytes_up`).  Raises on any drift."""
+    (`repro.sim.StepTimer.bytes_up`).  A per-rank-budget sparse wire is
+    audited rank by rank: `rank_wire_bytes` must equal the packed payload
+    of the scalar wire each rank semantically transmits (`for_rank`) AND
+    the cost model's per-rank charge (`StepTimer.bytes_up_ranks`).
+    Raises on any drift."""
     import jax.numpy as jnp
 
     from repro.sim import StepTimer
@@ -65,10 +69,22 @@ def audit_wire_bytes(n: int = 4096):
         timer = StepTimer(wire=wire, n=n).bytes_up()
         if not declared == actual == timer:
             drift.append((name, declared, actual, timer))
+
+    budgets = (2, 4, 8, 16)
+    pr_name = f"topk per-rank {budgets}/512"
+    pr_wire = SparseWire(k_per_block=budgets, block_size=512)
+    declared_r = pr_wire.rank_wire_bytes(n, len(budgets))
+    model_r = StepTimer(wire=pr_wire, n=n).bytes_up_ranks(len(budgets))
+    for i in range(len(budgets)):
+        payload = pr_wire.for_rank(i).pack(jnp.zeros((n,), jnp.float32))
+        actual = sum(int(p.size) * p.dtype.itemsize for p in payload)
+        if not int(declared_r[i]) == actual == int(model_r[i]):
+            drift.append((f"{pr_name}[rank {i}]", int(declared_r[i]),
+                          actual, int(model_r[i])))
     if drift:
         raise AssertionError(
             f"wire_bytes drift (declared, packed, cost-model): {drift}")
-    return [name for name, _ in WIRE_TABLE]
+    return [name for name, _ in WIRE_TABLE] + [pr_name]
 
 
 if __name__ == "__main__":

@@ -10,7 +10,6 @@ Protocol: d_k=2, gamma=1e-5; degradation should be mild until p -> 1.
 """
 import argparse
 import json
-from pathlib import Path
 
 from repro.core import compression as C
 from repro.sim import get_straggler_process
@@ -20,7 +19,7 @@ try:
 except ImportError:                      # run as a script
     import _repro_common as R
 
-OUT = Path(__file__).resolve().parents[1] / "results" / "repro"
+OUT = None                # optional override; default R.results_dir()
 PS = [0.1, 0.3, 0.5, 0.7, 0.9]
 
 # wire-format sweep: (method, compressor) per wire the collective supports
@@ -37,15 +36,21 @@ def run(trials=5, T=400, wires=tuple(WIRES), straggler="iid", N=100,
     for wname in wires:
         method, comp = WIRES[wname]
         for p in PS:
+            eff_spread = (R.hetero_spread(p, spread)
+                          if straggler == "hetero" else spread)
+            eff_burst = (R.markov_burst(p, mean_burst)
+                         if straggler == "markov" else mean_burst)
             proc = get_straggler_process(straggler, N, p,
-                                         mean_burst=mean_burst, spread=spread)
+                                         mean_burst=eff_burst,
+                                         spread=eff_spread)
             res[f"{wname},p={p}"] = R.run_trials(
                 method, comp, trials=trials, N=N, M=N, d=2, p=p, gamma=1e-5,
                 T=T, straggler=proc)
     res["meta"] = {"straggler": straggler, "wires": list(wires), "N": N}
-    OUT.mkdir(parents=True, exist_ok=True)
+    out = OUT or R.results_dir()
+    out.mkdir(parents=True, exist_ok=True)
     suffix = "" if straggler == "iid" else f"_{straggler}"
-    (OUT / f"fig3{suffix}.json").write_text(json.dumps(res, indent=1))
+    (out / f"fig3{suffix}.json").write_text(json.dumps(res, indent=1))
     return res
 
 

@@ -32,15 +32,15 @@ import numpy as np
 from repro.core import compression as C
 from repro.core.collectives import DenseWire, SignWire, SparseWire
 from repro.sim import (DEFAULT_COMPUTE, DEFAULT_LINK, StepTimer,
-                       attach_times, get_straggler_process, simulate_run,
-                       time_to_target)
+                       TraceReplay, attach_times, get_straggler_process,
+                       simulate_run)
 
 try:
     from . import _repro_common as R
 except ImportError:                      # run as a script
     import _repro_common as R
 
-OUT = Path(__file__).resolve().parents[1] / "results" / "repro"
+OUT = None                # optional override; default R.results_dir()
 
 N_WIRE = 1 << 22        # 4M coords/rank: the production wire scale the
                         # step times are projected at (ROADMAP comm table)
@@ -56,17 +56,26 @@ METHODS = {
 
 
 def _processes(N, p, smoke=False):
-    return {
+    procs = {
         "iid": get_straggler_process("iid", N, p),
         "markov": get_straggler_process("markov", N, p,
                                         mean_burst=4.0 if smoke else 8.0),
-        "hetero": get_straggler_process("hetero", N, p, spread=0.8),
+        "hetero": get_straggler_process("hetero", N, p,
+                                        spread=R.hetero_spread(p, 0.8)),
     }
+    # recorded-incident replay with one total-outage row: the all-straggler
+    # step semantics (ghat = 0, error vectors untouched, timeout-cost step,
+    # zero uplink bytes) ride the full pipeline end to end
+    rows = np.array(procs["hetero"].sample_trace(
+        jax.random.PRNGKey(7), 24 if smoke else 48))
+    rows[3, :] = 0.0
+    procs["trace"] = TraceReplay.from_array(rows)
+    return procs
 
 
 def run(trials=3, T=400, N=100, p=0.2, gamma=1e-5, record_every=20,
         n_wire=N_WIRE, link=DEFAULT_LINK, compute=DEFAULT_COMPUTE,
-        smoke=False):
+        smoke=False, out_dir=None):
     if smoke:
         trials, T, N, record_every = 1, 60, 20, 5
     res = {"meta": {"n_wire": n_wire, "p": p, "trials": trials, "T": T,
@@ -93,20 +102,9 @@ def run(trials=3, T=400, N=100, p=0.2, gamma=1e-5, record_every=20,
                 sim = simulate_run(proc, timer, T,
                                    jax.random.PRNGKey(1000 + s))
                 per_trial.append(attach_times(hist, sim))
-            steps = per_trial[0]["step"]
-            curve = {"step": steps}
-            for key in ("loss", "time_s", "bytes_up_cum", "bytes_down_cum"):
-                arr = np.array([c[key] for c in per_trial])
-                curve[key] = arr.mean(0).tolist()
-                if key == "loss":
-                    curve["loss_std"] = arr.std(0).tolist()
-            curves[mname] = curve
+            curves[mname] = R.summarize_trials(per_trial)
 
-        # target: reachable by every method's mean curve (5% above the
-        # slowest-converging method's final loss)
-        target = 1.05 * max(c["loss"][-1] for c in curves.values())
-        t2t = {m: time_to_target(c["time_s"], c["loss"], target)
-               for m, c in curves.items()}
+        target, t2t = R.target_and_t2t(curves)
         summary = {"target_loss": target, "time_to_target_s": t2t}
         if t2t["cocoef_sign"] and t2t["sgc_dense"]:
             summary["sign_vs_dense_speedup"] = \
@@ -114,8 +112,9 @@ def run(trials=3, T=400, N=100, p=0.2, gamma=1e-5, record_every=20,
         res["curves"][pname] = curves
         res["summary"][pname] = summary
 
-    OUT.mkdir(parents=True, exist_ok=True)
-    (OUT / "fig8.json").write_text(json.dumps(res, indent=1))
+    out = Path(out_dir) if out_dir else (OUT or R.results_dir())
+    out.mkdir(parents=True, exist_ok=True)
+    (out / "fig8.json").write_text(json.dumps(res, indent=1))
     return res
 
 
@@ -126,8 +125,12 @@ def main():
                          "20 ranks)")
     ap.add_argument("--trials", type=int, default=3)
     ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--out", default=None,
+                    help="output directory (default: $REPRO_RESULTS_DIR "
+                         "or results/repro)")
     args = ap.parse_args()
-    res = run(trials=args.trials, T=args.steps, smoke=args.smoke)
+    res = run(trials=args.trials, T=args.steps, smoke=args.smoke,
+              out_dir=args.out)
     for pname, s in res["summary"].items():
         t2t = ", ".join(
             f"{m}={v:.2f}s" if v is not None else f"{m}=never"

@@ -1,0 +1,199 @@
+"""Fig. 9 (beyond-paper): rate-aware vs mean-rate gradient coding under
+non-iid stragglers.
+
+Eq. 3's encode weights 1/(d_k (1-p)) divide by the expected number of
+participating holders ONLY when every rank participates with the same
+marginal rate 1-p.  Under heterogeneous participation (per-rank rates q_i)
+the mean-rate aggregate is a *biased* estimate of the global gradient —
+E[ghat] = sum_k c_k grad_k with c_k = mean_{i in S_k} q_i / (1-p) != 1 —
+so COCO-EF converges to the wrong point (the failure mode approximate
+gradient coding in heterogeneous systems is structured to avoid, Song &
+Choi; biased-compressor error compounds per Beznosikov et al.).
+
+This sweep drives the paper's linreg protocol (overdetermined so the bias
+shows up as a loss plateau, not just a different interpolant) with three
+coding variants under every non-iid straggler process:
+
+  mean_rate         eq. 3 weights from the scalar mean rate p (the bug)
+  rate_aware        W[i,k] = S[i,k] / sum_j S[j,k] q_j  (unbiased for any
+                    per-rank rates; bit-for-bit eq. 3 when rates are
+                    uniform — see markov, where the two curves coincide)
+  rate_aware_alloc  rate-aware weights on the greedy expected-coverage
+                    allocation (coding.rate_aware_allocation): same replica
+                    budget, extra redundancy where the fleet is unreliable
+
+All three ship the identical SignWire payload, so simulated step times are
+identical and any time-to-target gap is purely the coding.  Emits
+results/repro/fig9.json with per-(process, method) (time, loss) curves,
+closed-form weight-bias diagnostics, a per-rank wire-budget demo
+(sim.solve_k_budgets under a heterogeneous uplink), and time-to-target
+summaries.
+
+  PYTHONPATH=src python benchmarks/fig9_hetero_sweep.py [--smoke]
+"""
+import argparse
+import dataclasses
+import json
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.core import coding, compression as C
+from repro.core.collectives import SignWire, SparseWire
+from repro.sim import (DEFAULT_COMPUTE, DEFAULT_LINK, HeterogeneousRates,
+                       LinkProfile, MarkovBursty, StepTimer, TraceReplay,
+                       attach_times, simulate_run, solve_k_budgets)
+
+try:
+    from . import _repro_common as R
+except ImportError:                      # run as a script
+    import _repro_common as R
+
+OUT = None                # optional override; default R.results_dir()
+
+N_WIRE = 1 << 22          # production wire scale (ROADMAP comm table)
+
+METHODS = ("mean_rate", "rate_aware", "rate_aware_alloc")
+
+P_SLOW, P_FAST, SLOW_FRACTION = 0.8, 0.02, 0.3
+
+
+def _processes(N, smoke=False):
+    """The non-iid processes of the sweep.  `trace` replays a recorded
+    sample of the two-class fleet INCLUDING one total-outage row, so the
+    all-straggler step semantics (ghat = 0, error untouched, timeout-cost
+    step) ride through the whole pipeline."""
+    two = HeterogeneousRates.two_class(N, p_slow=P_SLOW, p_fast=P_FAST,
+                                       slow_fraction=SLOW_FRACTION)
+    rows = np.array(two.sample_trace(jax.random.PRNGKey(99),
+                                     24 if smoke else 64))
+    rows[3, :] = 0.0                     # recorded total outage
+    return {
+        "hetero": two,
+        "markov": MarkovBursty(num_devices=N, p=0.2,
+                               mean_burst=4.0 if smoke else 8.0),
+        "trace": TraceReplay.from_array(rows),
+    }
+
+
+def _mean_p(proc) -> float:
+    return float(1.0 - np.asarray(proc.rates()).mean())
+
+
+def _weight_bias(alloc, W, rates) -> float:
+    """max_k |sum_i q_i W[i,k] - 1|: the closed-form per-subset bias of the
+    masked aggregate's expectation (0 = unbiased)."""
+    q = np.asarray(rates, np.float64)
+    coeff = q @ np.asarray(W, np.float64)
+    return float(np.max(np.abs(coeff - 1.0)))
+
+
+def _budget_demo(N: int):
+    """Per-rank wire budgets under a heterogeneous uplink: the slow-uplink
+    third of the fleet gets smaller top-K budgets (equal-time solver)."""
+    slow = max(1, N // 3)
+    link = LinkProfile(rank_bandwidth_gbps=(2.5,) * slow
+                       + (10.0,) * (N - slow))
+    ks = solve_k_budgets(N_WIRE, N, link, block_size=512, k_ref=8)
+    wire = SparseWire(k_per_block=ks, block_size=512)
+    per_rank = wire.rank_wire_bytes(N_WIRE, N)
+    return {"rank_bandwidth_gbps": list(link.up_bandwidths(N)),
+            "k_budgets": list(ks),
+            "bytes_up_per_rank": [int(b) for b in per_rank],
+            "uplink_s_per_rank": list(link.up_s_ranks(per_rank))}
+
+
+def run(trials=3, T=400, N=60, gamma=2e-5, record_every=20, d=3,
+        n_wire=N_WIRE, link=DEFAULT_LINK, compute=DEFAULT_COMPUTE,
+        smoke=False, out_dir=None):
+    # gamma is sized so the run REACHES its plateau within T: the mean-rate
+    # bias is a plateau-level effect (deep in the transient the biased
+    # weights act like a slightly larger step and can even look faster)
+    if smoke:
+        trials, T, N, record_every, gamma = 1, 120, 16, 5, 1e-4
+    dim = N // 2                        # overdetermined: bias => plateau
+    wire = SignWire(group_size=512)
+    timer = StepTimer(wire=wire, n=n_wire, link=link, compute=compute)
+    res = {"meta": {"n_wire": n_wire, "trials": trials, "T": T, "N": N,
+                    "dim": dim, "d": d, "gamma": gamma,
+                    "two_class": {"p_slow": P_SLOW, "p_fast": P_FAST,
+                                  "slow_fraction": SLOW_FRACTION},
+                    "link": dataclasses.asdict(link),
+                    "compute": dataclasses.asdict(compute),
+                    "budget_demo": _budget_demo(N)},
+           "curves": {}, "summary": {}}
+
+    for pname, proc in _processes(N, smoke=smoke).items():
+        rates = np.asarray(proc.rates())
+        p_bar = _mean_p(proc)
+        # every variant ships the identical wire, so one simulated timeline
+        # per trial serves all three method curves
+        sims = [simulate_run(proc, timer, T, jax.random.PRNGKey(1000 + s))
+                for s in range(trials)]
+        curves, bias = {}, {}
+        for mname in METHODS:
+            per_trial = []
+            for s in range(trials):
+                grad_fn, loss_fn, theta0, _ = R.tasks.linreg_task(
+                    seed=s, num_subsets=N, dim=dim)
+                alloc = (coding.rate_aware_allocation(rates, N, d)
+                         if mname == "rate_aware_alloc" else
+                         coding.random_allocation(s, N, N, d))
+                hist = R.run_trial(
+                    "cocoef", C.GroupedSign(), grad_fn, loss_fn, theta0,
+                    N=N, M=N, d=d, p=p_bar, gamma=gamma, T=T, seed=s,
+                    record_every=record_every, straggler=proc,
+                    rate_aware=mname != "mean_rate", allocation=alloc)
+                per_trial.append(attach_times(hist, sims[s]))
+                if s == 0:
+                    W = (coding.encode_weights(alloc, rates=rates)
+                         if mname != "mean_rate" else
+                         coding.encode_weights(alloc, p_bar))
+                    bias[mname] = _weight_bias(alloc, W, rates)
+            curves[mname] = R.summarize_trials(per_trial)
+
+        target, t2t = R.target_and_t2t(curves)
+        summary = {"target_loss": target, "time_to_target_s": t2t,
+                   "weight_bias_max": bias,
+                   "final_loss": {m: c["loss"][-1]
+                                  for m, c in curves.items()}}
+        if t2t["rate_aware"] and t2t["mean_rate"]:
+            summary["rate_aware_vs_mean_rate_speedup"] = \
+                t2t["mean_rate"] / t2t["rate_aware"]
+        res["curves"][pname] = curves
+        res["summary"][pname] = summary
+
+    out = Path(out_dir) if out_dir else (OUT or R.results_dir())
+    out.mkdir(parents=True, exist_ok=True)
+    (out / "fig9.json").write_text(json.dumps(res, indent=1))
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny configuration for CI (1 trial, 120 steps, "
+                         "16 ranks)")
+    ap.add_argument("--trials", type=int, default=3)
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--out", default=None,
+                    help="output directory (default: $REPRO_RESULTS_DIR "
+                         "or results/repro)")
+    args = ap.parse_args()
+    res = run(trials=args.trials, T=args.steps, smoke=args.smoke,
+              out_dir=args.out)
+    for pname, s in res["summary"].items():
+        t2t = ", ".join(
+            f"{m}={v:.2f}s" if v is not None else f"{m}=never"
+            for m, v in s["time_to_target_s"].items())
+        bias = ", ".join(f"{m}={b:.3f}"
+                         for m, b in s["weight_bias_max"].items())
+        speed = s.get("rate_aware_vs_mean_rate_speedup")
+        print(f"{pname:8s} target={s['target_loss']:.1f}  {t2t}"
+              + (f"  rate-aware x{speed:.2f}" if speed else "")
+              + f"  |bias|={bias}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,10 +1,19 @@
 """Benchmark harness — one entry per paper table/figure + system tables.
-Prints ``name,us_per_call,derived`` CSV (derived = headline metric)."""
+Prints ``name,us_per_call,derived`` CSV (derived = headline metric).
+
+The artifact directory is configurable: ``--results-dir DIR`` or
+``$REPRO_RESULTS_DIR`` (default: the gitignored <repo>/results/repro)."""
+import argparse
 import json
+import os
 import time
 from pathlib import Path
 
-RESULTS = Path(__file__).resolve().parents[1] / "results"
+
+def _repro_dir() -> Path:
+    # single source of truth for the artifact root (lazy: keeps --help fast)
+    from benchmarks._repro_common import results_dir
+    return results_dir()
 
 
 def _timed(fn, *a, **k):
@@ -14,9 +23,9 @@ def _timed(fn, *a, **k):
 
 
 def _fig(name, runner, headline, trials, T):
-    """Use cached results/repro/<name>.json when present (the full runs are
+    """Use the cached <results>/<name>.json when present (the full runs are
     produced by the repro sweep); else run reduced."""
-    cached = RESULTS / "repro" / f"{name}.json"
+    cached = _repro_dir() / f"{name}.json"
     if cached.exists():
         res = json.loads(cached.read_text())
         return 0.0, headline(res)
@@ -32,7 +41,8 @@ def main() -> None:
                             fig4_redundancy_sweep as f4,
                             fig5_ef_ablation as f5, fig6_lr_schedule as f6,
                             fig7_classification as f7,
-                            fig8_time_to_accuracy as f8, kernel_bench)
+                            fig8_time_to_accuracy as f8,
+                            fig9_hetero_sweep as f9, kernel_bench)
 
     us, d = _fig("fig2", f2.run,
                  lambda r: (f"cocoef_sign={r['cocoef_sign']['loss'][-1]:.1f}"
@@ -47,7 +57,7 @@ def main() -> None:
     # fig3 straggler-process variants (cached only — produced by
     # `fig3_straggler_sweep.py --straggler markov|hetero`)
     for variant in ("markov", "hetero"):
-        cached = RESULTS / "repro" / f"fig3_{variant}.json"
+        cached = _repro_dir() / f"fig3_{variant}.json"
         if cached.exists():
             r = json.loads(cached.read_text())
             rows.append((f"fig3_straggler_p[{variant}]", 0.0,
@@ -86,6 +96,20 @@ def main() -> None:
     us, d = _fig("fig8", f8.run, _fig8_headline, trials=1, T=120)
     rows.append(("fig8_time_to_accuracy", us, d))
 
+    def _fig9_headline(r):
+        parts = []
+        for pname, s in r["summary"].items():
+            t = s["time_to_target_s"]
+            ra, mr = t.get("rate_aware"), t.get("mean_rate")
+            parts.append(f"{pname}:ra={ra:.2f}s" if ra is not None
+                         else f"{pname}:ra=never")
+            if ra is not None and mr is not None:
+                parts[-1] += f"|mean={mr:.2f}s|x{mr / ra:.2f}"
+        return "|".join(parts)
+
+    us, d = _fig("fig9", f9.run, _fig9_headline, trials=1, T=120)
+    rows.append(("fig9_hetero_sweep", us, d))
+
     for name, bits, ratio in comm_volume.run():
         rows.append((f"comm_volume[{name}]", 0.0,
                      f"bits={bits}|x{ratio:.1f}"))
@@ -117,4 +141,13 @@ def main() -> None:
 
 
 if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results-dir", default=None,
+                    help="benchmark artifact directory (default: "
+                         "$REPRO_RESULTS_DIR or <repo>/results/repro)")
+    args = ap.parse_args()
+    if args.results_dir:
+        # exported so every lazily-imported benchmark module (fig8/fig9
+        # writers, emit_tables readers) resolves the same directory
+        os.environ["REPRO_RESULTS_DIR"] = args.results_dir
     main()

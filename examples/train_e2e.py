@@ -37,16 +37,38 @@ def main():
                     choices=["auto", "pallas", "jnp"],
                     help="fused-kernel dispatch for the wire hot path "
                          "(auto = Pallas on TPU, jnp reference elsewhere)")
+    def _prob(s):
+        v = float(s)
+        if not 0.0 <= v < 1.0:
+            raise argparse.ArgumentTypeError(
+                f"straggle probability {v} must be in [0, 1)")
+        return v
+
     ap.add_argument("--straggler", default="iid",
                     choices=["iid", "markov", "hetero", "trace"],
                     help="straggler process driving the per-step "
                          "participation masks (repro.sim)")
-    ap.add_argument("--straggler-p", type=float, default=None,
+    ap.add_argument("--straggler-p", type=_prob, default=None,
                     help="override the arch's Bernoulli/stationary "
-                         "straggle probability")
+                         "straggle probability (in [0, 1))")
+    ap.add_argument("--straggler-burst", type=float, default=8.0,
+                    help="markov: mean slow-burst length in steps (>= 1)")
+    ap.add_argument("--straggler-spread", type=float, default=0.5,
+                    help="hetero: per-rank p_i in p*(1 +/- spread), every "
+                         "p_i must land in [0, 1)")
     ap.add_argument("--straggler-trace", default=None,
                     help="recorded-mask JSON for --straggler trace "
                          "(default: synthesize a bursty trace and save it)")
+    ap.add_argument("--mean-rate-coding", action="store_true",
+                    help="encode weights from the scalar mean rate p "
+                         "(paper eq. 3) instead of the per-rank rates "
+                         "q_i of the straggler process (rate-aware, "
+                         "unbiased under non-iid stragglers; the default)")
+    ap.add_argument("--rank-uplink-gbps", default=None,
+                    help="comma-separated per-coding-rank uplink Gbit/s; "
+                         "with --compressor block_topk, solves equal-time "
+                         "per-rank wire budgets (sim.solve_k_budgets) so "
+                         "slow-uplink ranks send fewer coords per block")
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_e2e_ckpt")
     args = ap.parse_args()
@@ -75,18 +97,40 @@ def main():
         trace_path = str(trace.to_json("/tmp/repro_e2e_trace.json"))
         print(f"synthesized bursty trace -> {trace_path}")
 
-    setup = build_train_setup(spec, mesh, shape,
-                              TrainRun(base_lr=5e-3, mode="cocoef",
-                                       compressor=args.compressor,
-                                       num_buckets=args.num_buckets,
-                                       backend=args.backend,
-                                       straggler=args.straggler,
-                                       straggler_trace=trace_path),
-                              smoke=True)
+    k_budgets = None
+    if args.rank_uplink_gbps:
+        if args.compressor != "block_topk":
+            ap.error("--rank-uplink-gbps needs --compressor block_topk "
+                     "(per-rank budgets ride the sparse wire)")
+        from repro.sim import LinkProfile, solve_k_budgets
+        bws = tuple(float(b) for b in args.rank_uplink_gbps.split(","))
+        link = LinkProfile(rank_bandwidth_gbps=bws)
+        k_budgets = solve_k_budgets(
+            1 << 16, len(bws), link, block_size=spec.coding.block_size,
+            k_ref=spec.coding.k_per_block)
+        print(f"per-rank wire budgets (equal-time): k={k_budgets} for "
+              f"uplinks {bws} Gbit/s")
+
+    try:
+        run = TrainRun(base_lr=5e-3, mode="cocoef",
+                       compressor=args.compressor,
+                       num_buckets=args.num_buckets,
+                       backend=args.backend,
+                       straggler=args.straggler,
+                       straggler_burst=args.straggler_burst,
+                       straggler_spread=args.straggler_spread,
+                       straggler_trace=trace_path,
+                       rate_aware=not args.mean_rate_coding,
+                       k_budgets=k_budgets)
+        setup = build_train_setup(spec, mesh, shape, run, smoke=True)
+    except ValueError as e:        # bad straggler/coding knobs fail HERE,
+        ap.error(str(e))           # not as NaNs deep inside jit
     proc = setup.straggler_process
+    rates = setup.cocoef_cfg.straggler_rates
     print(f"arch={args.arch} coding ranks={setup.n_code} "
           f"per-rank batch={setup.b_loc} local flat={setup.flat_pad} "
-          f"straggler={type(proc).__name__ if proc else 'none'}")
+          f"straggler={type(proc).__name__ if proc else 'none'} "
+          f"coding={'rate-aware q_i' if rates is not None else 'mean-rate p'}")
 
     key = jax.random.PRNGKey(0)
     params, e, opt = setup.init_state(key)

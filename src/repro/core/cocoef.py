@@ -27,7 +27,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable, List, Optional, Sequence, Tuple
+from typing import Callable, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -48,10 +48,17 @@ class CocoEFConfig:
     coding_axes: Tuple[str, ...] = ("data",)
     group_size: int = 512
     straggler_p: float = 0.0
+    straggler_rates: Optional[Tuple[float, ...]] = None
+    # ^ per-rank participation rates q_i (StragglerProcess.rates()) the
+    #   encode weights were built with; None = scalar mean rate (eq. 3).
+    #   Threaded so batch makers fold the SAME rate-aware W as the trainer.
     mode: str = "cocoef"              # cocoef | coco | dense
     compressor: str = "sign"          # sign | block_topk | topk | identity
     topk_k: int = 64                  # global-K budget (compressor="topk")
-    k_per_block: int = 8              # kept coords/block (compressor="block_topk")
+    k_per_block: Union[int, Tuple[int, ...]] = 8
+    # ^ kept coords/block (compressor="block_topk"); a per-rank tuple (from
+    #   sim.cost_model.solve_k_budgets) gives slow-uplink ranks smaller
+    #   wire budgets (SparseWire per-rank budgets)
     block_size: int = 256             # sparsification block (compressor="block_topk")
     wire_dtype: str = "float32"       # sparse values / dense payload dtype
     ef_dtype: str = "float32"         # error-vector storage dtype
@@ -156,6 +163,16 @@ def _bucketed(flat: jnp.ndarray, num_buckets: int):
     return flat.reshape(num_buckets, -1)
 
 
+def _check_rank_budgets(wire, mask: jnp.ndarray) -> None:
+    """A per-rank-budget wire must carry exactly one budget per coding
+    rank — jnp's clamped indexing would otherwise make a short tuple
+    silently reuse the last budget for the out-of-range ranks."""
+    if wire.has_rank_budgets() and len(wire.k_per_block) != mask.shape[0]:
+        raise ValueError(
+            f"wire has {len(wire.k_per_block)} per-rank budgets, the "
+            f"coding collective has {mask.shape[0]} ranks")
+
+
 def _joined(parts: List[jnp.ndarray]) -> jnp.ndarray:
     return parts[0] if len(parts) == 1 else jnp.concatenate(parts)
 
@@ -206,7 +223,9 @@ def cocoef_update(g_local: jnp.ndarray, e_local: jnp.ndarray,
         ghat_parts = []
         for acc_b in _bucketed(gamma * g_local, cfg.num_buckets):
             wire = cfg.wire_format(acc_b.shape[0], nd)
-            payload = wire.fused_pack(acc_b, use_pallas=use_pallas)
+            _check_rank_budgets(wire, mask)
+            payload = wire.apply_rank_budget(
+                wire.fused_pack(acc_b, use_pallas=use_pallas), my_idx)
             ghat_parts.append(two_phase_coded_allreduce(
                 None, wire, coll, mask, payload=payload))
         return _joined(ghat_parts), e_local
@@ -216,8 +235,21 @@ def cocoef_update(g_local: jnp.ndarray, e_local: jnp.ndarray,
     for g_b, e_b in zip(_bucketed(g_local, cfg.num_buckets),
                         _bucketed(e_local, cfg.num_buckets)):
         wire = cfg.wire_format(g_b.shape[0], nd)
-        payload, _, e_new_b = wire.fused_local_step(
-            g_b, e_b, gamma, my_mask, use_pallas=use_pallas, want_c=False)
+        _check_rank_budgets(wire, mask)
+        if wire.has_rank_budgets():
+            # per-rank wire budgets: the truncation below this rank's budget
+            # must feed the error vector, so reconstruct c from the
+            # budget-masked payload instead of taking the fused kernel's
+            # full-budget error update
+            acc_b = gamma * g_b.astype(jnp.float32) + e_b.astype(jnp.float32)
+            payload = wire.apply_rank_budget(
+                wire.fused_pack(acc_b, use_pallas=use_pallas), my_idx)
+            c_b = wire.unpack(payload)
+            e_new_b = jnp.where(my_mask > 0, acc_b - c_b,
+                                e_b.astype(jnp.float32))
+        else:
+            payload, _, e_new_b = wire.fused_local_step(
+                g_b, e_b, gamma, my_mask, use_pallas=use_pallas, want_c=False)
         ghat_parts.append(two_phase_coded_allreduce(
             None, wire, coll, mask, payload=payload))
         e_parts.append(e_new_b)

@@ -20,6 +20,8 @@ __all__ = [
     "Allocation",
     "random_allocation",
     "cyclic_allocation",
+    "rate_aware_allocation",
+    "expected_coverage",
     "encode_weights",
     "straggler_mask",
     "redundancy_theta",
@@ -87,16 +89,104 @@ def cyclic_allocation(num_devices: int, num_subsets: int, d: int) -> Allocation:
     return alloc
 
 
-def encode_weights(alloc: Allocation, p: float) -> jnp.ndarray:
-    """W[i, k] = S[i, k] / (d_k * (1 - p))   (eq. 3).
+def expected_coverage(alloc: Allocation,
+                      rates: Sequence[float]) -> np.ndarray:
+    """Per-subset P(at least one holder participates) under per-rank
+    participation rates q_i, shape (M,):  1 - prod_{i in S_k} (1 - q_i)."""
+    q = np.asarray(rates, np.float64)
+    if q.shape != (alloc.num_devices,):
+        raise ValueError(f"need {alloc.num_devices} per-rank rates, got "
+                         f"shape {q.shape}")
+    miss = np.prod(np.where(alloc.S > 0, (1.0 - q)[:, None], 1.0), axis=0)
+    return 1.0 - miss
+
+
+def rate_aware_allocation(rates: Sequence[float], num_subsets: int, d: int,
+                          *, load_slack: float = 1.25) -> Allocation:
+    """Heterogeneity-aware allocation: greedy expected-coverage maximization
+    under per-rank participation rates q_i.
+
+    Spends the same total replica budget as a uniform-d allocation (d * M
+    replicas) but lets d_k vary: every subset starts on its cyclic home rank
+    (data locality), then each remaining replica goes to the (subset, rank)
+    pair with the largest marginal gain in expected coverage
+
+        gain(k, i) = P(no current holder of k participates) * q_i ,
+
+    subject to the balanced per-rank load cap ceil(load_slack * d * M / N).
+    Subsets homed on unreliable ranks have the largest miss probability, so
+    the extra redundancy concentrates exactly where the fleet is weak (the
+    heterogeneous-system placement of Song & Choi).  Deterministic (ties
+    break toward the lowest rank index then subset index).
+    """
+    q = np.asarray(rates, np.float64)
+    N, M = q.shape[0], num_subsets
+    if N < 1 or M < 1:
+        raise ValueError("need at least one device and one subset")
+    if np.any(q < 0.0) or np.any(q > 1.0):
+        raise ValueError("every participation rate must be in [0, 1]")
+    d_eff = min(max(int(d), 1), N)
+    S = np.zeros((N, M), dtype=np.int8)
+    for k in range(M):
+        S[k % N, k] = 1
+    miss = 1.0 - q[np.arange(M) % N]                 # per-subset miss prob
+    cap = int(np.ceil(load_slack * d_eff * M / N))
+    for _ in range(d_eff * M - M):                   # remaining budget
+        load = S.sum(axis=1)
+        avail = (S == 0) & (load < cap)[:, None]     # (N, M)
+        gains = np.where(avail, miss[None, :] * q[:, None], -1.0)
+        i, k = np.unravel_index(int(np.argmax(gains)), gains.shape)
+        if gains[i, k] < 0.0:
+            break                                    # no capacity anywhere
+        S[i, k] = 1
+        miss[k] *= 1.0 - q[i]
+    alloc = Allocation(S=S)
+    alloc.validate()
+    return alloc
+
+
+def encode_weights(alloc: Allocation, p: Optional[float] = None,
+                   rates: Optional[Sequence[float]] = None) -> jnp.ndarray:
+    """Encode weights making the masked aggregate unbiased.
+
+    Exactly one of `p` / `rates` must be given:
+
+      p      W[i, k] = S[i, k] / (d_k * (1 - p))        (eq. 3, iid mean rate)
+      rates  W[i, k] = S[i, k] / sum_j S[j, k] * q_j    (rate-aware)
+
+    The rate-aware form divides by the *expected number of participating
+    holders* of subset k, so E[sum_i I_i g_i] = grad F for ANY per-rank
+    marginal participation rates q_j (`StragglerProcess.rates()`); with
+    uniform rates q_j = 1 - p it is bit-for-bit eq. 3.
 
     Multiplying the (M, D) per-subset gradient stack by W yields the (N, D)
     coded vectors g_i^t.
     """
-    if not 0.0 <= p < 1.0:
-        raise ValueError(f"straggler probability p={p} must be in [0, 1)")
-    d = alloc.d.astype(np.float64)
-    W = alloc.S.astype(np.float64) / (d[None, :] * (1.0 - p))
+    if (p is None) == (rates is None):
+        raise ValueError("give exactly one of p (eq. 3) or rates (per-rank)")
+    if p is not None:
+        if not 0.0 <= p < 1.0:
+            raise ValueError(f"straggler probability p={p} must be in [0, 1)")
+        denom = alloc.d.astype(np.float64) * (1.0 - p)
+    else:
+        q = np.asarray(rates, np.float64)
+        if q.shape != (alloc.num_devices,):
+            raise ValueError(f"need {alloc.num_devices} per-rank rates, got "
+                             f"shape {q.shape}")
+        if np.any(q < 0.0) or np.any(q > 1.0):
+            raise ValueError("every participation rate must be in [0, 1]")
+        if np.all(q == q[0]):
+            # uniform rates: reduce to the eq.-3 product so the iid case is
+            # bit-for-bit identical to encode_weights(alloc, p=1-q)
+            denom = alloc.d.astype(np.float64) * q[0]
+        else:
+            denom = alloc.S.astype(np.float64).T @ q
+        if np.any(denom <= 0.0):
+            bad = np.nonzero(denom <= 0.0)[0].tolist()
+            raise ValueError(
+                f"subsets {bad} have zero expected coverage (every holder "
+                f"has participation rate 0) — add redundancy on live ranks")
+    W = alloc.S.astype(np.float64) / denom[None, :]
     return jnp.asarray(W, dtype=jnp.float32)
 
 

@@ -73,10 +73,11 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 from repro.compat import axis_size
@@ -215,6 +216,29 @@ class WireFormat:
         decoded = jax.vmap(lambda *p: self.unpack(p))(*payloads)
         return (sender_mask[:, None] * decoded).sum(axis=0)
 
+    # ---- per-rank adaptive wire budgets -----------------------------------
+    # A wire may carry a *per-rank* budget vector (SparseWire with a tuple
+    # k_per_block, sized by repro.sim.cost_model.solve_k_budgets): every rank
+    # ships the same fixed payload SHAPE (the all_to_all needs static
+    # shapes), but entries beyond rank i's budget are zeroed at pack time
+    # and charged per-rank by the cost model / comm audit.
+
+    def has_rank_budgets(self) -> bool:
+        """True when this wire carries per-rank budgets (see SparseWire)."""
+        return False
+
+    def apply_rank_budget(self, payload: Tuple[jnp.ndarray, ...],
+                          rank) -> Tuple[jnp.ndarray, ...]:
+        """Zero payload entries beyond `rank`'s budget (identity for
+        uniform-budget wires).  `rank` may be a traced scalar."""
+        return payload
+
+    def rank_wire_bytes(self, n: int, num_ranks: int) -> np.ndarray:
+        """(num_ranks,) int64 phase-1 bytes per rank — the per-rank
+        refinement of `wire_bytes` (uniform unless the wire carries
+        per-rank budgets)."""
+        return np.full((num_ranks,), int(self.wire_bytes(n)), np.int64)
+
 
 @dataclasses.dataclass(frozen=True)
 class SignWire(WireFormat):
@@ -282,16 +306,72 @@ class SparseWire(WireFormat):
 
     roundtrip == BlockTopK.apply up to 1-2 ulp of the scale normalization;
     delta = 1 - k/block_size (Assumption 5).
+
+    `k_per_block` may be a per-rank tuple (one budget per coding rank,
+    typically from `repro.sim.cost_model.solve_k_budgets`): the payload is
+    shaped by max(k) on every rank (static shapes for the all_to_all), and
+    `apply_rank_budget` zeroes the values beyond rank i's budget so
+    slow-uplink ranks effectively send fewer coordinates.  `wire_bytes`
+    then reports the max-budget (shipped-shape) bytes; the honest per-rank
+    on-the-wire accounting is `rank_wire_bytes` (zeros beyond the budget
+    cost nothing under length framing), which is what the cost model and
+    the comm-volume audit charge.
     """
 
-    k_per_block: int = 8
+    k_per_block: Union[int, Tuple[int, ...]] = 8
     block_size: int = 256
     value_dtype: str = "float32"
 
     def __post_init__(self):
-        if not (0 < self.k_per_block <= self.block_size):
-            raise ValueError(f"need 0 < k_per_block <= block_size, got "
-                             f"{self.k_per_block} / {self.block_size}")
+        ks = self.k_per_block
+        if isinstance(ks, (list, tuple, np.ndarray)):
+            ks = tuple(int(k) for k in np.asarray(ks).reshape(-1))
+            if not ks:
+                raise ValueError("per-rank k_per_block must be non-empty")
+            object.__setattr__(self, "k_per_block", ks)
+        else:
+            ks = (int(ks),)
+        for k in ks:
+            if not (0 < k <= self.block_size):
+                raise ValueError(f"need 0 < k_per_block <= block_size, got "
+                                 f"{k} / {self.block_size}")
+
+    @property
+    def k_max(self) -> int:
+        """Largest per-rank budget = the shipped payload's k dimension."""
+        ks = self.k_per_block
+        return max(ks) if isinstance(ks, tuple) else ks
+
+    def has_rank_budgets(self) -> bool:
+        return isinstance(self.k_per_block, tuple)
+
+    def for_rank(self, rank: int) -> "SparseWire":
+        """The scalar-budget wire rank `rank` semantically transmits."""
+        if not self.has_rank_budgets():
+            return self
+        return dataclasses.replace(
+            self, k_per_block=int(self.k_per_block[rank]))
+
+    def apply_rank_budget(self, payload, rank):
+        if not self.has_rank_budgets():
+            return payload
+        idx, values, scales = payload
+        k_i = jnp.asarray(self.k_per_block, jnp.int32)[
+            jnp.asarray(rank, jnp.int32)]
+        keep = jnp.arange(self.k_max, dtype=jnp.int32) < k_i     # (k_max,)
+        # top-k indices within a block are distinct, so zeroing the values
+        # beyond the budget is exactly the k_i-budget payload
+        values = jnp.where(keep[None, :], values, jnp.zeros_like(values))
+        return idx, values, scales
+
+    def rank_wire_bytes(self, n, num_ranks):
+        if not self.has_rank_budgets():
+            return np.full((num_ranks,), int(self.wire_bytes(n)), np.int64)
+        if len(self.k_per_block) != num_ranks:
+            raise ValueError(f"wire has {len(self.k_per_block)} per-rank "
+                             f"budgets, asked for {num_ranks} ranks")
+        return np.asarray([self.for_rank(i).wire_bytes(n)
+                           for i in range(num_ranks)], np.int64)
 
     @property
     def index_dtype(self):
@@ -301,7 +381,7 @@ class SparseWire(WireFormat):
         xf = x.astype(jnp.float32)
         blocks = xf.reshape(-1, self.block_size)
         mag = jnp.abs(blocks)
-        topv, idx = lax.top_k(mag, self.k_per_block)        # (nb, k)
+        topv, idx = lax.top_k(mag, self.k_max)              # (nb, k)
         sv = jnp.take_along_axis(blocks, idx, axis=-1)      # signed values
         scale = topv[:, 0]            # block max |.| = first top-k value
         safe = jnp.where(scale == 0, 1.0, scale)
@@ -321,7 +401,7 @@ class SparseWire(WireFormat):
         nb = n // self.block_size
         idx_b = 2 if self.block_size <= (1 << 16) else 4
         val_b = jnp.dtype(self.value_dtype).itemsize
-        return nb * (self.k_per_block * (idx_b + val_b) + 4)  # + f32 scale
+        return nb * (self.k_max * (idx_b + val_b) + 4)  # + f32 scale
 
     def alignment(self):
         return self.block_size
@@ -335,7 +415,7 @@ class SparseWire(WireFormat):
     def fused_pack(self, x, use_pallas=None):
         use = kernel_ops.resolve_use_pallas(use_pallas, x.shape[0],
                                             self._tile())
-        idx, val, scale = kernel_ops.topk_pack(x, self.k_per_block,
+        idx, val, scale = kernel_ops.topk_pack(x, self.k_max,
                                                self.block_size,
                                                use_pallas=use)
         return (idx.astype(self.index_dtype),
@@ -347,7 +427,7 @@ class SparseWire(WireFormat):
                                             self._tile())
         narrow = jnp.dtype(self.value_dtype) != jnp.float32
         idx, val, scale, c, e_new = kernel_ops.ef_topk_fused(
-            g, e, gamma, mask_self, self.k_per_block, self.block_size,
+            g, e, gamma, mask_self, self.k_max, self.block_size,
             want_c=want_c or narrow, use_pallas=use)
         val = val.astype(jnp.dtype(self.value_dtype))
         payload = (idx.astype(self.index_dtype), val, scale)

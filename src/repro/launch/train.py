@@ -62,9 +62,41 @@ class TrainRun:
     straggler_burst: float = 8.0     # markov: mean slow-burst length (steps)
     straggler_spread: float = 0.5    # hetero: p_i in p*(1 +/- spread)
     straggler_trace: Optional[str] = None  # trace: recorded-mask JSON path
+    rate_aware: bool = True          # encode weights from per-rank rates
+    #   q_i (StragglerProcess.rates()) instead of the scalar mean rate p —
+    #   identical to eq. 3 for uniform rates, unbiased under non-iid
+    #   stragglers; False = the paper-faithful mean-rate eq. 3
+    k_budgets: Optional[Tuple[int, ...]] = None
+    #   per-coding-rank block-top-K wire budgets (sim.solve_k_budgets);
+    #   overrides spec.coding.k_per_block when compressor="block_topk"
     seed: int = 0
     aux_weight: float = 0.01
     param_dtype: Optional[str] = None   # override cfg (e.g. "bfloat16")
+
+    def __post_init__(self):
+        # validate at construction: bad straggler / coding knobs used to
+        # surface as NaNs or cryptic shape errors deep inside jit
+        if self.mode not in ("cocoef", "coco", "dense"):
+            raise ValueError(f"unknown mode {self.mode!r}; "
+                             f"have ('cocoef', 'coco', 'dense')")
+        if self.straggler not in stragglers.STRAGGLER_PROCESSES:
+            raise ValueError(
+                f"unknown straggler process {self.straggler!r}; "
+                f"have {stragglers.STRAGGLER_PROCESSES}")
+        if self.straggler_burst < 1.0:
+            raise ValueError(f"straggler_burst={self.straggler_burst} must "
+                             f"be >= 1 step")
+        if self.straggler_spread < 0.0:
+            raise ValueError(f"straggler_spread={self.straggler_spread} "
+                             f"must be >= 0")
+        if self.backend not in ("auto", "pallas", "jnp"):
+            raise ValueError(f"unknown backend {self.backend!r}; "
+                             f"have ('auto', 'pallas', 'jnp')")
+        if self.num_buckets < 1:
+            raise ValueError(f"num_buckets={self.num_buckets} must be >= 1")
+        if self.k_budgets is not None and \
+                any(k < 1 for k in self.k_budgets):
+            raise ValueError("every per-rank k budget must be >= 1")
 
 
 @dataclasses.dataclass
@@ -131,7 +163,22 @@ def build_train_setup(spec: ArchSpec, mesh: Mesh, shape: ShapeCfg,
     d = min(spec.coding.redundancy, max(n_code, 1))
     alloc = (coding.cyclic_allocation(n_code, M, d) if n_code > 1 else
              coding.Allocation(S=np.ones((1, 1), np.int8)))
-    W = np.asarray(coding.encode_weights(alloc, p_strag))  # (N, M)
+
+    # straggler process feeding the mask-provider hook (repro.sim): the
+    # legacy fast path (iid with p=0 -> all-ones mask, no PRNG work) is
+    # preserved by constructing no process at all in that case
+    straggler_proc = None
+    if n_code > 1 and (run.straggler != "iid" or p_strag > 0):
+        straggler_proc = stragglers.get_straggler_process(
+            run.straggler, n_code, p_strag, mean_burst=run.straggler_burst,
+            spread=run.straggler_spread, trace=run.straggler_trace)
+
+    # rate-aware encode weights: divide by the expected participating
+    # holders sum_j S[j,k] q_j (unbiased for ANY per-rank rates) instead of
+    # d_k (1-p); bit-for-bit eq. 3 when the rates are uniform (iid/markov)
+    straggler_rates = None
+    if run.rate_aware and straggler_proc is not None:
+        straggler_rates = tuple(float(x) for x in straggler_proc.rates())
 
     gb, seq = shape.global_batch, shape.seq_len
     per_subset = max(1, gb // M)
@@ -149,11 +196,25 @@ def build_train_setup(spec: ArchSpec, mesh: Mesh, shape: ShapeCfg,
     group = spec.coding.group_size
     nd_chunk = axis_sizes[coding_axes[-1]] if coding_axes else 1
 
+    k_per_block = spec.coding.k_per_block
+    if run.k_budgets is not None:
+        eff_comp = run.compressor or spec.coding.compressor
+        if eff_comp != "block_topk":
+            raise ValueError(
+                f"k_budgets rides the block-top-K sparse wire; the "
+                f"effective compressor is {eff_comp!r} (pass "
+                f"compressor='block_topk' or drop k_budgets)")
+        if len(run.k_budgets) != max(n_code, 1):
+            raise ValueError(f"k_budgets has {len(run.k_budgets)} entries, "
+                             f"the run has {max(n_code, 1)} coding ranks")
+        k_per_block = run.k_budgets
+
     cocoef_cfg = CocoEFConfig(
         coding_axes=coding_axes if coding_axes else ("data",),
-        group_size=group, straggler_p=p_strag, mode=mode,
+        group_size=group, straggler_p=p_strag,
+        straggler_rates=straggler_rates, mode=mode,
         compressor=run.compressor or spec.coding.compressor,
-        topk_k=spec.coding.topk_k, k_per_block=spec.coding.k_per_block,
+        topk_k=spec.coding.topk_k, k_per_block=k_per_block,
         block_size=spec.coding.block_size, wire_dtype=spec.coding.wire_dtype,
         ef_dtype=run.ef_dtype, phase2_dtype=run.phase2_dtype,
         phase2_sign=run.phase2_sign, num_buckets=run.num_buckets,
@@ -165,15 +226,6 @@ def build_train_setup(spec: ArchSpec, mesh: Mesh, shape: ShapeCfg,
     loc = _local_flat_size(pshapes, pspecs, mesh)
     flat_pad = padded_size(loc, nd_chunk, cocoef_cfg.pad_multiple,
                            run.num_buckets)
-
-    # straggler process feeding the mask-provider hook (repro.sim): the
-    # legacy fast path (iid with p=0 -> all-ones mask, no PRNG work) is
-    # preserved by constructing no process at all in that case
-    straggler_proc = None
-    if n_code > 1 and (run.straggler != "iid" or p_strag > 0):
-        straggler_proc = stragglers.get_straggler_process(
-            run.straggler, n_code, p_strag, mean_burst=run.straggler_burst,
-            spread=run.straggler_spread, trace=run.straggler_trace)
 
     mesh_shape = tuple(mesh.devices.shape)
     state_shape = mesh_shape + (flat_pad,)
@@ -344,8 +396,14 @@ def make_batch_for_step(setup: TrainSetup, spec: ArchSpec, shape: ShapeCfg,
     """Materialize a real global batch (smoke/integration runs)."""
     cfg = spec.smoke if smoke else spec.config
     n_code, b_loc, seq = setup.n_code, setup.b_loc, setup.seq_len
-    W = np.asarray(coding.encode_weights(
-        setup.allocation, setup.cocoef_cfg.straggler_p))
+    # fold the SAME encode weights the trainer aggregates with: rate-aware
+    # (per-rank q_i) when the setup carries rates, else mean-rate eq. 3
+    if setup.cocoef_cfg.straggler_rates is not None:
+        W = np.asarray(coding.encode_weights(
+            setup.allocation, rates=setup.cocoef_cfg.straggler_rates))
+    else:
+        W = np.asarray(coding.encode_weights(
+            setup.allocation, setup.cocoef_cfg.straggler_p))
     per_subset = max(1, shape.global_batch // setup.allocation.num_subsets)
 
     toks = []

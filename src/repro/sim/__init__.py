@@ -15,7 +15,7 @@ Two halves (ISSUE 3 / ROADMAP Notes):
     and a bytes-on-wire ledger (benchmarks/fig8_time_to_accuracy.py).
 """
 from .cost_model import (DEFAULT_COMPUTE, DEFAULT_LINK, ComputeProfile,
-                         LinkProfile, StepTimer)
+                         LinkProfile, StepTimer, solve_k_budgets)
 from .simulate import SimRun, attach_times, simulate_run, time_to_target
 from .stragglers import (STRAGGLER_PROCESSES, HeterogeneousRates,
                          IIDBernoulli, MarkovBursty, StragglerProcess,
@@ -24,7 +24,7 @@ from .stragglers import (STRAGGLER_PROCESSES, HeterogeneousRates,
 __all__ = [
     "StragglerProcess", "IIDBernoulli", "MarkovBursty", "HeterogeneousRates",
     "TraceReplay", "get_straggler_process", "STRAGGLER_PROCESSES",
-    "LinkProfile", "ComputeProfile", "StepTimer", "DEFAULT_LINK",
-    "DEFAULT_COMPUTE", "SimRun", "simulate_run", "attach_times",
-    "time_to_target",
+    "LinkProfile", "ComputeProfile", "StepTimer", "solve_k_budgets",
+    "DEFAULT_LINK", "DEFAULT_COMPUTE", "SimRun", "simulate_run",
+    "attach_times", "time_to_target",
 ]

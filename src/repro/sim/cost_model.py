@@ -35,17 +35,20 @@ from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.collectives import WireFormat
+from repro.core.collectives import SparseWire, WireFormat
 
-__all__ = ["LinkProfile", "ComputeProfile", "StepTimer", "DEFAULT_LINK",
-           "DEFAULT_COMPUTE"]
+__all__ = ["LinkProfile", "ComputeProfile", "StepTimer", "solve_k_budgets",
+           "DEFAULT_LINK", "DEFAULT_COMPUTE"]
 
 
 @dataclasses.dataclass(frozen=True)
 class LinkProfile:
     """Per-rank link: bandwidth + latency (+ optional server fan-in).
 
-    bandwidth_gbps: uplink Gbit/s per rank (phase-1 payload).
+    bandwidth_gbps: nominal uplink Gbit/s per rank (phase-1 payload).
+    rank_bandwidth_gbps: optional per-rank uplink Gbit/s overriding the
+      nominal value (heterogeneous last-mile links — the setting the
+      per-rank wire budgets of `solve_k_budgets` target); () = uniform.
     down_bandwidth_gbps: downlink Gbit/s for the phase-2 broadcast; None =
       same as uplink.  Server broadcast usually rides a multicast/reduce
       tree, hence the faster default.
@@ -59,9 +62,33 @@ class LinkProfile:
     down_bandwidth_gbps: Optional[float] = 100.0
     latency_s: float = 1e-3
     server_fanin: int = 0
+    rank_bandwidth_gbps: Tuple[float, ...] = ()
+
+    def __post_init__(self):
+        if self.bandwidth_gbps <= 0:
+            raise ValueError("uplink bandwidth must be positive")
+        if any(b <= 0 for b in self.rank_bandwidth_gbps):
+            raise ValueError("every per-rank uplink bandwidth must be "
+                             "positive")
+
+    def up_bandwidths(self, num_ranks: int) -> np.ndarray:
+        """(num_ranks,) effective uplink Gbit/s per rank."""
+        if not self.rank_bandwidth_gbps:
+            return np.full((num_ranks,), self.bandwidth_gbps, np.float64)
+        if len(self.rank_bandwidth_gbps) != num_ranks:
+            raise ValueError(
+                f"link has {len(self.rank_bandwidth_gbps)} per-rank "
+                f"bandwidths, asked for {num_ranks} ranks")
+        return np.asarray(self.rank_bandwidth_gbps, np.float64)
 
     def up_s(self, nbytes: int) -> float:
         return self.latency_s + nbytes * 8.0 / (self.bandwidth_gbps * 1e9)
+
+    def up_s_ranks(self, nbytes: Sequence[float]) -> np.ndarray:
+        """(num_ranks,) uplink seconds for per-rank payload byte counts."""
+        nb = np.asarray(nbytes, np.float64)
+        bw = self.up_bandwidths(nb.shape[0])
+        return self.latency_s + nb * 8.0 / (bw * 1e9)
 
     def down_s(self, nbytes: int) -> float:
         bw = self.down_bandwidth_gbps or self.bandwidth_gbps
@@ -119,8 +146,15 @@ class StepTimer:
     phase2_itemsize: int = 4
 
     def bytes_up(self) -> int:
-        """Phase-1 payload bytes for one rank — `wire.wire_bytes(n)`."""
+        """Phase-1 payload bytes for one rank — `wire.wire_bytes(n)` (the
+        shipped payload shape; per-rank budget wires refine this via
+        `bytes_up_ranks`)."""
         return int(self.wire.wire_bytes(self.n))
+
+    def bytes_up_ranks(self, num_ranks: int) -> np.ndarray:
+        """(num_ranks,) per-rank phase-1 bytes — `wire.rank_wire_bytes`,
+        the same per-rank accounting `benchmarks/comm_volume.py` audits."""
+        return self.wire.rank_wire_bytes(self.n, num_ranks)
 
     def bytes_down(self) -> int:
         """Phase-2 broadcast bytes received by one rank."""
@@ -148,18 +182,70 @@ class StepTimer:
         trace = np.asarray(trace, np.float64)
         T, N = trace.shape
         comp = self.compute.rank_seconds(N)                    # (N,)
+        b_up_r = self.bytes_up_ranks(N).astype(np.float64)     # (N,)
+        up_r = self.link.up_s_ranks(b_up_r)                    # (N,)
         participants = trace.sum(axis=1)                       # (T,)
-        # slowest participating rank; an all-straggler step still burns the
-        # full compute window (the server times out waiting)
+        # slowest participating rank's compute, then the slowest
+        # participating uplink (per-rank bytes x per-rank bandwidth).
+        # ALL-STRAGGLER SEMANTICS (the single definition, mirrored by the
+        # training step and tested end to end): the server waits out the
+        # slowest rank's compute window (its timeout), receives nothing on
+        # the uplink (zero uplink time and bytes), and still broadcasts the
+        # zero aggregate so every rank stays in lockstep — the training
+        # step applies ghat = 0 and leaves the error vectors untouched.
         t_comp = np.where(participants > 0,
                           np.max(np.where(trace > 0, comp[None, :], 0.0),
                                  axis=1),
                           comp.max())
         t_up = np.where(participants > 0,
                         self._waves(participants) *
-                        self.link.up_s(self.bytes_up()), 0.0)
+                        np.max(np.where(trace > 0, up_r[None, :], 0.0),
+                               axis=1),
+                        0.0)
         t_down = self.link.down_s(self.bytes_down())
         times = t_comp + t_up + t_down
-        bytes_up = participants * self.bytes_up()
+        bytes_up = trace @ b_up_r
         bytes_down = np.full((T,), float(N * self.bytes_down()))
         return times, bytes_up, bytes_down
+
+
+def solve_k_budgets(n: int, num_ranks: int, link: LinkProfile, *,
+                    block_size: int = 512, value_dtype: str = "float32",
+                    k_ref: int = 8, deadline_s: Optional[float] = None,
+                    k_min: int = 1) -> Tuple[int, ...]:
+    """Equal-time per-rank top-K wire budgets for heterogeneous uplinks.
+
+    Picks k_i per rank so every rank's phase-1 uplink of a
+    `SparseWire(k_i, block_size)` payload fits one deadline — by default
+    the uplink seconds of the uniform reference wire `SparseWire(k_ref)`
+    on the nominal `link.bandwidth_gbps`.  Slow-uplink ranks therefore
+    send fewer coordinates per block instead of stretching the step:
+
+        k_i = floor( (deadline_bytes_i / nblocks - scale_bytes)
+                     / (index_bytes + value_bytes) )
+
+    clipped to [k_min, block_size] (the k_min floor keeps a rank
+    contributing even when its link cannot meet the deadline).  Feed the
+    result to `SparseWire(k_per_block=ks)` / `CocoEFConfig.k_per_block`.
+    """
+    if n % block_size:
+        raise ValueError(f"n={n} must be a multiple of block_size="
+                         f"{block_size} (pad upstream)")
+    ref = SparseWire(k_per_block=k_ref, block_size=block_size,
+                     value_dtype=value_dtype)
+    if deadline_s is None:
+        deadline_s = link.latency_s + \
+            ref.wire_bytes(n) * 8.0 / (link.bandwidth_gbps * 1e9)
+    if deadline_s <= link.latency_s:
+        raise ValueError(f"deadline {deadline_s}s is not above the link "
+                         f"latency {link.latency_s}s")
+    bw = link.up_bandwidths(num_ranks)                         # Gbit/s
+    budget_bytes = (deadline_s - link.latency_s) * bw * 1e9 / 8.0
+    nb = n // block_size
+    idx_b = 2 if block_size <= (1 << 16) else 4
+    val_b = np.dtype(value_dtype).itemsize
+    # epsilon before the floor: the deadline->bytes round trip loses an ulp,
+    # which would otherwise knock an exactly-affordable k down by one
+    k = np.floor((budget_bytes / nb - 4.0) / (idx_b + val_b) + 1e-9)
+    k = np.clip(k, k_min, block_size).astype(np.int64)
+    return tuple(int(v) for v in k)

@@ -93,6 +93,10 @@ class IIDBernoulli(StragglerProcess):
 
     p: float = 0.0
 
+    def __post_init__(self):
+        if not 0.0 <= self.p < 1.0:
+            raise ValueError(f"straggle probability p={self.p} not in [0, 1)")
+
     def mask(self, key, step):
         return coding.straggler_mask(key, step, self.num_devices, self.p)
 
@@ -169,9 +173,19 @@ class MarkovBursty(StragglerProcess):
 
 def _linear_rates(num_devices: int, p: float, spread: float) -> Tuple[float, ...]:
     """Per-rank straggle probabilities p_i = p * (1 +/- spread), linearly
-    spaced rank 0 (fastest) -> rank N-1 (slowest), clipped to [0, 0.99]."""
+    spaced rank 0 (fastest) -> rank N-1 (slowest).
+
+    Raises unless every p_i lands in [0, 1) — silently clipping out-of-range
+    rates used to surface later as NaNs / biased marginals deep inside jit.
+    """
+    if spread < 0.0:
+        raise ValueError(f"straggler spread={spread} must be >= 0")
     lo, hi = p * (1.0 - spread), p * (1.0 + spread)
-    ps = np.clip(np.linspace(lo, hi, max(num_devices, 1)), 0.0, 0.99)
+    if lo < 0.0 or hi >= 1.0:
+        raise ValueError(
+            f"spread={spread} puts per-rank straggle probabilities in "
+            f"[{lo:.3f}, {hi:.3f}], outside [0, 1) — lower p or spread")
+    ps = np.linspace(lo, hi, max(num_devices, 1))
     return tuple(float(x) for x in ps)
 
 
@@ -279,7 +293,13 @@ def get_straggler_process(name: str, num_devices: int, p: float = 0.0, *,
     markov  MarkovBursty(p, mean_burst)      — correlated slow bursts
     hetero  HeterogeneousRates.linear(p, spread) — per-rank p_i profile
     trace   TraceReplay.from_json(trace)     — recorded masks
+
+    All knobs are validated here (p in [0, 1), mean_burst >= 1,
+    spread >= 0 with every p_i in [0, 1)) so bad CLI values fail with a
+    clear ValueError instead of NaNs deep inside jit.
     """
+    if name != "trace" and not 0.0 <= p < 1.0:
+        raise ValueError(f"straggle probability p={p} must be in [0, 1)")
     if name == "iid":
         return IIDBernoulli(num_devices=num_devices, p=p)
     if name == "markov":

@@ -272,7 +272,8 @@ def test_wire_bytes_audit_single_source_of_truth():
     WireFormat.wire_bytes."""
     from benchmarks import comm_volume
     audited = comm_volume.audit_wire_bytes()
-    assert len(audited) == len(comm_volume.WIRE_TABLE)
+    # every uniform wire in the table + the per-rank-budget sparse wire
+    assert len(audited) == len(comm_volume.WIRE_TABLE) + 1
     # and the table rows themselves are wire_bytes verbatim
     for (name, nbytes, _), (_, wire) in zip(comm_volume.run_wires(),
                                             comm_volume.WIRE_TABLE):
