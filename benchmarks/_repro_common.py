@@ -122,15 +122,11 @@ def run_trials(method: str, compressor, task="linreg", trials=5,
         hist = run_trial(method, compressor, grad_fn, loss_fn, theta0,
                          seed=s, eval_fns=eval_fns, **kw)
         curves.append(hist)
-    steps = curves[0]["step"]
-    out = {"step": steps}
-    for key in curves[0]:
-        if key == "step":
-            continue
-        arr = np.array([c[key] for c in curves])
-        out[key] = arr.mean(0).tolist()
-        out[key + "_std"] = arr.std(0).tolist()
-    return out
+    # route through the ONE trial-averaging convention (summarize_trials,
+    # shared with the fig8/fig9 time-axis sweeps): every recorded column
+    # gets a mean + a _std companion, exactly the legacy JSON keys
+    keys = tuple(k for k in curves[0] if k != "step")
+    return summarize_trials(curves, keys=keys, std_keys=keys)
 
 
 def final(curve, key="loss"):
@@ -139,17 +135,19 @@ def final(curve, key="loss"):
 
 def summarize_trials(per_trial,
                      keys=("loss", "time_s", "bytes_up_cum",
-                           "bytes_down_cum")):
-    """Mean the per-trial joined histories (run_trial + attach_times) into
-    one curve dict; loss also gets a std column.  Shared by the
-    time-axis sweeps (fig8 / fig9) so the averaging convention cannot
-    drift between figures."""
+                           "bytes_down_cum"),
+                     std_keys=("loss",)):
+    """THE trial-averaging convention: mean the per-trial histories into one
+    curve dict; every key in `std_keys` also gets a `<key>_std` column
+    (right after its mean, preserving the historical JSON key order).
+    Shared by `run_trials` (fig2-fig7) and the time-axis sweeps
+    (fig8 / fig9 / fig10) so the averaging cannot drift between figures."""
     curve = {"step": per_trial[0]["step"]}
     for key in keys:
         arr = np.array([c[key] for c in per_trial])
         curve[key] = arr.mean(0).tolist()
-        if key == "loss":
-            curve["loss_std"] = arr.std(0).tolist()
+        if key in std_keys:
+            curve[key + "_std"] = arr.std(0).tolist()
     return curve
 
 
@@ -161,6 +159,39 @@ def target_and_t2t(curves, margin=1.05):
     target = margin * max(c["loss"][-1] for c in curves.values())
     return target, {m: time_to_target(c["time_s"], c["loss"], target)
                     for m, c in curves.items()}
+
+
+def drop_target_and_t2t(curves, frac=0.8):
+    """Relative-drop target for slow-moving (LM) losses, fig10's
+    convention: the level `frac` of the way down from the shared initial
+    recorded loss to the worst method's best-achieved loss.  Unlike the
+    fig8 margin convention (built for toy losses that fall orders of
+    magnitude), this sits BELOW every curve's starting point yet is
+    reachable by every curve, so time-to-target is non-degenerate even
+    when a smoke run only shaves a few percent off the loss."""
+    from repro.sim import time_to_target
+    loss0 = max(c["loss"][0] for c in curves.values())
+    floor = max(min(c["loss"]) for c in curves.values())
+    target = loss0 - frac * (loss0 - floor)
+    return target, {m: time_to_target(c["time_s"], c["loss"], target)
+                    for m, c in curves.items()}
+
+
+def compute_range_ms(by_strag) -> tuple:
+    """(min, max) grad_s in ms over one arch's {straggler: {wire: cell}}
+    record of fig10.json — the honest per-model compute summary (each
+    cell's compiled step differs slightly by wire kernels and
+    mask-provider flops).  Lives here, not in fig10_model_zoo, so the
+    artifact consumers (run.py, emit_tables) never import the sweep
+    module and its XLA_FLAGS / launch-stack side effects."""
+    vals = [c["grad_s"] * 1e3
+            for by_wire in by_strag.values() for c in by_wire.values()]
+    return min(vals), max(vals)
+
+
+def fmt_ms_range(lo: float, hi: float) -> str:
+    """One convention for printing a compute range: collapsed when flat."""
+    return f"{lo:.3f}ms" if lo == hi else f"{lo:.3f}-{hi:.3f}ms"
 
 
 def hetero_spread(p: float, spread: float) -> float:

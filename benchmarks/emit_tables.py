@@ -149,6 +149,50 @@ def render_fig9():
     return "\n".join(out)
 
 
+def render_fig10():
+    """§Model zoo table from the cached fig10 sweep: the REAL mesh train
+    step per (arch x wire x straggler), per-model compute from the
+    compiled step's HLO flops (ComputeProfile.from_compiled_hlo), and the
+    relative-drop time-to-target."""
+    fig10 = RESULTS / "fig10.json"
+    if not fig10.exists():
+        return None
+    res = json.loads(fig10.read_text())
+    m = res["meta"]
+    out = ["", "### §Model zoo (fig10: production mesh train step, "
+           f"T={m['T']}, mesh={m['mesh']}, p={m['p_straggler']}, "
+           f"device {m['device_flops']:.0e} FLOP/s @ mfu {m['mfu']})", "",
+           "| arch | straggler | wire | compute ms/step | final loss "
+           "| t2t (ms) | KiB up/step/rank |",
+           "|---|---|---|---|---|---|---|"]
+    for arch, by_strag in res["curves"].items():
+        for strag, curves in by_strag.items():
+            t2t = res["summary"][arch][strag]["time_to_target_s"]
+            for wname, c in curves.items():
+                comp = res["compute"][arch][strag][wname]
+                t = t2t.get(wname)
+                t_cell = f"{t*1e3:.1f}" if t is not None else "never"
+                out.append(
+                    f"| {arch} | {strag} | {wname} "
+                    f"| {comp['grad_s']*1e3:.3f} | {c['loss'][-1]:.3f} "
+                    f"| {t_cell} | {comp['bytes_up_per_rank']/1024:.1f} |")
+    out.append("")
+    from benchmarks._repro_common import compute_range_ms, fmt_ms_range
+    comps = {arch: compute_range_ms(by)
+             for arch, by in res["compute"].items()}
+    out.append("Per-model phase-1 compute (from `launch.hlo_cost` flops of "
+               "each cell's compiled step, NOT the cost model's 5 ms "
+               "default; min-max over that arch's wire x straggler cells): "
+               + ", ".join(f"{a}={fmt_ms_range(lo, hi)}"
+                           for a, (lo, hi) in comps.items())
+               + ".  The reference-vs-mesh Algorithm-1 parity gate "
+               "(`fig10_model_zoo.py --parity`, "
+               "tests/test_algorithm_parity.py) holds bit-for-bit for "
+               "sign, block_topk and dense wires.")
+    out.append("")
+    return "\n".join(out)
+
+
 def _replace_section(text: str, header: str, table: str) -> str:
     """Replace everything from `header` to the next '### §' (or EOF)."""
     if header in text:
@@ -176,6 +220,9 @@ def main():
     f9 = render_fig9()
     if f9 is not None:
         text = _replace_section(text, "### §Rate-aware coding", f9)
+    f10 = render_fig10()
+    if f10 is not None:
+        text = _replace_section(text, "### §Model zoo", f10)
     exp.write_text(text)
     print(text[-2500:])
 

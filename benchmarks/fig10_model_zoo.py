@@ -1,0 +1,269 @@
+"""Fig. 10 (beyond-paper): model-zoo time-to-accuracy on the REAL mesh
+train step.
+
+Every other figure trains through the (N, D) reference EF loop on linreg /
+CNN toys; this sweep drives the PRODUCTION path end to end — `REGISTRY`
+ArchSpecs -> `build_train_setup` -> the jitted shard_map train step with
+Pallas-fused wires (`cocoef_update`) — over a matrix of
+
+  model family   x  wire          x  straggler process
+  (dense / MoE /    (sign /          (iid / markov / hetero)
+   xLSTM)           block_topk /
+                    dense SGC)
+
+with synthetic token batches from `repro.data.pipeline` and the loss/step
+histories joined to the `repro.sim` wall-clock cost model via
+`attach_times`, exactly like fig8.  Two things fig8 cannot tell:
+
+  * per-model step COMPUTE comes from the compiled step itself:
+    `ComputeProfile.from_compiled_hlo` feeds `launch.hlo_cost`'s
+    while-aware flop count of the optimized HLO into `from_flops`, so the
+    simulated step time scales with the architecture instead of the cost
+    model's fixed 5 ms default;
+  * the dynamics are the production Algorithm 1 on non-convex transformer /
+    MoE / xLSTM losses (the Beznosikov et al. biased-vs-unbiased and
+    Song & Choi heterogeneous-rate questions beyond linreg).
+
+`--parity` runs the reference-vs-mesh Algorithm-1 parity gate
+(`repro.launch.parity`) instead of the sweep: the reference EF loop and
+the mesh `cocoef_update`, same linreg task / masks / wire, must match
+BIT-FOR-BIT for every wire in {sign, block_topk, dense} — the same check
+tests/test_algorithm_parity.py enforces in the suite.
+
+Emits results/repro/fig10.json.
+
+  PYTHONPATH=src python benchmarks/fig10_model_zoo.py [--smoke] [--parity]
+"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+import argparse
+import dataclasses
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compat import make_mesh
+from repro.configs import REGISTRY, SMOKE_TRAIN
+from repro.core.collectives import DenseWire
+from repro.launch.train import (TrainRun, build_train_setup,
+                                make_batch_for_step)
+from repro.sim import (DEFAULT_LINK, ComputeProfile, StepTimer, attach_times,
+                      simulate_run)
+
+try:
+    from . import _repro_common as R
+except ImportError:                      # run as a script
+    import _repro_common as R
+
+OUT = None                # optional override; default R.results_dir()
+
+ARCHS = ("gemma2-2b", "olmoe-1b-7b", "xlstm-1.3b")   # dense / MoE / xLSTM
+WIRES = ("sign", "block_topk", "dense")
+STRAGGLERS = ("iid", "markov", "hetero")
+
+P_STRAG = 0.2             # straggler probability baked into every cell
+# simulated fleet device: 1 TFLOP/s at 40% MFU (edge-accelerator flavored,
+# matching the cost model's WAN link profile); only the RATIO between
+# architectures matters for the table — flops come from the compiled HLO
+DEVICE_FLOPS = 1e12
+MFU = 0.4
+
+# coding knobs scaled to the smoke flat sizes (the production 512-group
+# would swallow the whole padded vector of a toy model)
+_SMOKE_CODING = dict(group_size=32, block_size=64, k_per_block=4,
+                     straggler_p=P_STRAG)
+
+
+def _train_run(wire_name: str, straggler: str) -> TrainRun:
+    if wire_name == "dense":
+        return TrainRun(mode="dense", base_lr=1e-2, straggler=straggler,
+                        straggler_burst=4.0, straggler_spread=0.5)
+    return TrainRun(mode="cocoef", compressor=wire_name, base_lr=1e-2,
+                    straggler=straggler, straggler_burst=4.0,
+                    straggler_spread=0.5)
+
+
+def _timer_wire(setup, wire_name: str):
+    """The phase-1 wire format the cost model charges for this cell."""
+    if wire_name == "dense":
+        return DenseWire()
+    return setup.cocoef_cfg.wire_format(setup.flat_pad, 1)
+
+
+def run_cell(arch: str, wire_name: str, straggler: str, mesh, shape, *,
+             T: int, trials: int, link=DEFAULT_LINK) -> dict:
+    """One (arch, wire, straggler) cell: compile the real train step,
+    derive the per-model compute profile from its HLO, train `trials`
+    runs of `T` steps, and join the loss histories to the simulated
+    wall-clock."""
+    spec = REGISTRY[arch]
+    spec = dataclasses.replace(
+        spec, coding=dataclasses.replace(spec.coding, **_SMOKE_CODING))
+    cfg = spec.smoke
+    if cfg.input_mode != "tokens":
+        raise ValueError(f"{arch}: fig10 feeds token batches from "
+                         f"data.pipeline (input_mode={cfg.input_mode!r})")
+    run = _train_run(wire_name, straggler)
+    setup = build_train_setup(spec, mesh, shape, run, smoke=True)
+    proc = setup.straggler_process
+    assert proc is not None, "straggler_p > 0 must build a process"
+    ndev = int(np.prod(mesh.devices.shape))
+
+    specs = setup.input_specs()
+    compiled = jax.jit(setup.train_step).lower(
+        specs["params"], specs["e"], specs["opt"], specs["batch"],
+        specs["step"], specs["key"]).compile()
+
+    # per-model compute: while-aware flops of THIS compiled step (per
+    # device), not the cost model's fixed 5 ms default
+    compute = ComputeProfile.from_compiled_hlo(
+        compiled.as_text(), ndev, device_flops=DEVICE_FLOPS, mfu=MFU)
+
+    n_model = ndev // max(setup.n_code, 1)
+    n_wire = setup.flat_pad * n_model          # coords/coding rank on wire
+    wire = _timer_wire(setup, wire_name)
+    timer = StepTimer(wire=wire, n=n_wire, link=link, compute=compute)
+
+    per_trial = []
+    for s in range(trials):
+        key = jax.random.PRNGKey(1000 + s)
+        params, e, opt = setup.init_state(jax.random.fold_in(key, 7))
+        hist = {"step": [], "loss": []}
+        for t in range(T):
+            # THE production batch maker (pipeline.coded_train_batch under
+            # the hood): the sweep trains on exactly the batches the
+            # production entry point would feed this compiled step
+            batch = make_batch_for_step(setup, spec, shape, key, t,
+                                        smoke=True)
+            batch = jax.device_put(batch, setup.batch_shardings)
+            params, e, opt, m = compiled(params, e, opt, batch,
+                                         jnp.int32(t), key)
+            hist["step"].append(t)
+            hist["loss"].append(float(m["loss"]))
+        # the SAME key the train step's mask provider folds -> the cost
+        # model replays the identical mask trace (shared timeline)
+        sim = simulate_run(proc, timer, T, key)
+        per_trial.append(attach_times(hist, sim))
+
+    return {
+        "curve": R.summarize_trials(per_trial),
+        "flops_per_device": compute_flops(compute),
+        "grad_s": compute.grad_s,
+        "n_wire": n_wire,
+        "bytes_up_per_rank": int(wire.wire_bytes(n_wire)),
+        "n_code": setup.n_code,
+        "flat_pad": setup.flat_pad,
+    }
+
+
+def compute_flops(compute: ComputeProfile) -> float:
+    return compute.grad_s * DEVICE_FLOPS * MFU
+
+
+def _cells(smoke: bool):
+    """The sweep's cell list.  Smoke trims the matrix so CI compiles ~11
+    train steps instead of 27: the full wire axis runs under iid for every
+    arch, and the full straggler axis runs on the MoE arch's sign wire —
+    every (axis value) still exercised, logged in meta as trimmed."""
+    if not smoke:
+        return [(a, w, p) for a in ARCHS for w in WIRES for p in STRAGGLERS]
+    cells = [(a, w, "iid") for a in ARCHS for w in WIRES]
+    cells += [("olmoe-1b-7b", "sign", p) for p in ("markov", "hetero")]
+    return cells
+
+
+def run(T=60, trials=2, smoke=False, link=DEFAULT_LINK, out_dir=None):
+    if smoke:
+        T, trials = 12, 1
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+    shape = SMOKE_TRAIN
+    cells = _cells(smoke)
+    res = {"meta": {"T": T, "trials": trials, "shape": dataclasses.asdict(
+                        shape),
+                    "mesh": dict(zip(mesh.axis_names, mesh.devices.shape)),
+                    "p_straggler": P_STRAG,
+                    "device_flops": DEVICE_FLOPS, "mfu": MFU,
+                    "link": dataclasses.asdict(link),
+                    "cells": [list(c) for c in cells],
+                    "trimmed": smoke},
+           "curves": {}, "compute": {}, "summary": {}}
+
+    for arch, wire_name, strag in cells:
+        print(f"[fig10] {arch} x {wire_name} x {strag} ...", flush=True)
+        cell = run_cell(arch, wire_name, strag, mesh, shape, T=T,
+                        trials=trials, link=link)
+        res["curves"].setdefault(arch, {}).setdefault(strag, {})[
+            wire_name] = cell.pop("curve")
+        # keyed per CELL: the straggler process is compiled into the step
+        # (mask provider), so its flop count is part of the profile —
+        # collapsing over stragglers would misattribute compute
+        res["compute"].setdefault(arch, {}).setdefault(strag, {})[
+            wire_name] = cell
+
+    for arch, by_strag in res["curves"].items():
+        for strag, curves in by_strag.items():
+            target, t2t = R.drop_target_and_t2t(curves)
+            res["summary"].setdefault(arch, {})[strag] = {
+                "target_loss": target, "time_to_target_s": t2t}
+
+    out = Path(out_dir) if out_dir else (OUT or R.results_dir())
+    out.mkdir(parents=True, exist_ok=True)
+    (out / "fig10.json").write_text(json.dumps(res, indent=1))
+    return res
+
+
+def run_parity_gate(T=25) -> bool:
+    """The reference-vs-mesh Algorithm-1 parity gate over every wire."""
+    from repro.launch.parity import (PARITY_COMPRESSORS, assert_parity,
+                                     run_parity)
+    ok = True
+    for comp in PARITY_COMPRESSORS:
+        rep = run_parity(comp, T=T)
+        tag = "BIT-EXACT" if rep["bitexact"] else "DIVERGED"
+        print(f"[parity] {comp:10s} ({rep['wire']}) T={rep['T']}: {tag}  "
+              f"loss {rep['loss_start']:.1f} -> ref {rep['loss_ref']:.1f} "
+              f"/ mesh {rep['loss_mesh']:.1f}")
+        try:
+            assert_parity(rep)
+        except AssertionError as e:
+            ok = False
+            print(f"  {e}")
+    return ok
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI configuration: 1 trial, 12 steps, trimmed "
+                         "cell matrix (every axis value still exercised)")
+    ap.add_argument("--parity", action="store_true",
+                    help="run the reference-vs-mesh Algorithm-1 parity "
+                         "gate (bit-for-bit, every wire) instead of the "
+                         "sweep")
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--trials", type=int, default=2)
+    ap.add_argument("--out", default=None,
+                    help="output directory (default: $REPRO_RESULTS_DIR "
+                         "or results/repro)")
+    args = ap.parse_args()
+    if args.parity:
+        raise SystemExit(0 if run_parity_gate() else 1)
+    res = run(T=args.steps, trials=args.trials, smoke=args.smoke,
+              out_dir=args.out)
+    for arch, by_strag in res["summary"].items():
+        rng = R.fmt_ms_range(*R.compute_range_ms(res["compute"][arch]))
+        print(f"{arch}: compute {rng}/step")
+        for strag, s in by_strag.items():
+            t2t = ", ".join(
+                f"{w}={v*1e3:.1f}ms" if v is not None else f"{w}=never"
+                for w, v in s["time_to_target_s"].items())
+            print(f"  {strag:7s} target={s['target_loss']:.3f}  {t2t}")
+
+
+if __name__ == "__main__":
+    main()

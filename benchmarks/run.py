@@ -110,6 +110,29 @@ def main() -> None:
     us, d = _fig("fig9", f9.run, _fig9_headline, trials=1, T=120)
     rows.append(("fig9_hetero_sweep", us, d))
 
+    # fig10 model-zoo sweep (cached only — the real mesh train step needs
+    # a forced multi-device XLA before jax initializes, so the sweep runs
+    # as its own process: benchmarks/fig10_model_zoo.py [--smoke])
+    cached = _repro_dir() / "fig10.json"
+    if cached.exists():
+        from benchmarks._repro_common import compute_range_ms, fmt_ms_range
+        r = json.loads(cached.read_text())
+        for arch, by_strag in r["summary"].items():
+            parts = []
+            comp = "comp=" + fmt_ms_range(
+                *compute_range_ms(r["compute"][arch]))
+            for pname, s in by_strag.items():
+                t = s["time_to_target_s"]
+                cell = "|".join(
+                    f"{w}={v*1e3:.1f}ms" if v is not None else f"{w}=never"
+                    for w, v in t.items())
+                parts.append(f"{pname}:{cell}")
+            rows.append((f"fig10_model_zoo[{arch}]", 0.0,
+                         comp + "|" + "|".join(parts)))
+    else:
+        rows.append(("fig10_model_zoo", 0.0,
+                     "uncached:run benchmarks/fig10_model_zoo.py --smoke"))
+
     for name, bits, ratio in comm_volume.run():
         rows.append((f"comm_volume[{name}]", 0.0,
                      f"bits={bits}|x{ratio:.1f}"))

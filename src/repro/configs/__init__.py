@@ -2,7 +2,9 @@
 from . import (deepseek_v2_lite_16b, gemma2_2b, llava_next_34b,
                musicgen_large, nemotron4_15b, olmoe_1b_7b, phi3_medium_14b,
                qwen15_110b, xlstm_1_3b, zamba2_2_7b)
-from .common import ArchSpec, CodingPlan, ShapeCfg, STANDARD_SHAPES
+from .common import (ArchSpec, CodingPlan, ShapeCfg, SMOKE_DECODE,
+                     SMOKE_PREFILL, SMOKE_SHAPES, SMOKE_TRAIN,
+                     STANDARD_SHAPES)
 
 REGISTRY = {m.ARCH.arch_id: m.ARCH for m in (
     gemma2_2b, phi3_medium_14b, qwen15_110b, nemotron4_15b, zamba2_2_7b,

@@ -31,6 +31,21 @@ STANDARD_SHAPES = {
     "long_500k": LONG_500K,
 }
 
+# smoke-shape overrides: tiny seq/batch that drive the REAL mesh train /
+# serve steps on each arch's `ArchSpec.smoke` ModelConfig — the shapes the
+# CPU-CI sweeps (fig10 model zoo, serve smoke tests) run every cell at.
+# Deliberately NOT in STANDARD_SHAPES: the dry-run matrix stays the
+# production shape set.
+SMOKE_TRAIN = ShapeCfg("train", seq_len=32, global_batch=8)
+SMOKE_PREFILL = ShapeCfg("prefill", seq_len=32, global_batch=4)
+SMOKE_DECODE = ShapeCfg("decode", seq_len=32, global_batch=4)
+
+SMOKE_SHAPES = {
+    "train": SMOKE_TRAIN,
+    "prefill": SMOKE_PREFILL,
+    "decode": SMOKE_DECODE,
+}
+
 
 @dataclasses.dataclass(frozen=True)
 class CodingPlan:

@@ -34,6 +34,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.compat import axis_size
+from repro.kernels import ref as kernel_ref
 from repro.kernels.ops import backend_use_pallas
 from .collectives import (CodingCollectiveConfig, DenseWire, SignWire,
                           SparseWire, WireFormat, dense_allreduce,
@@ -241,7 +242,7 @@ def cocoef_update(g_local: jnp.ndarray, e_local: jnp.ndarray,
             # must feed the error vector, so reconstruct c from the
             # budget-masked payload instead of taking the fused kernel's
             # full-budget error update
-            acc_b = gamma * g_b.astype(jnp.float32) + e_b.astype(jnp.float32)
+            acc_b = kernel_ref.mul_add(gamma, g_b, e_b)
             payload = wire.apply_rank_budget(
                 wire.fused_pack(acc_b, use_pallas=use_pallas), my_idx)
             c_b = wire.unpack(payload)

@@ -81,7 +81,7 @@ import numpy as np
 from jax import lax
 
 from repro.compat import axis_size
-from repro.kernels import ops as kernel_ops
+from repro.kernels import ops as kernel_ops, ref as kernel_ref
 from repro.kernels.sign_pack import G_BLK as _SIGN_G_BLK
 from repro.kernels.topk_pack import R_BLK as _TOPK_R_BLK
 
@@ -196,7 +196,7 @@ class WireFormat:
         overrides the platform default (None = Pallas iff on TPU).
         want_c=False returns c=None and lets the kernels skip the
         full-vector c store (the train path only ships the payload)."""
-        acc = gamma * g.astype(jnp.float32) + e.astype(jnp.float32)
+        acc = kernel_ref.mul_add(gamma, g, e)
         payload = self.pack(acc)
         c = self.unpack(payload)
         e_new = jnp.where(mask_self > 0, acc - c, e.astype(jnp.float32))
@@ -425,21 +425,26 @@ class SparseWire(WireFormat):
                          want_c=True):
         use = kernel_ops.resolve_use_pallas(use_pallas, g.shape[0],
                                             self._tile())
-        narrow = jnp.dtype(self.value_dtype) != jnp.float32
         idx, val, scale, c, e_new = kernel_ops.ef_topk_fused(
             g, e, gamma, mask_self, self.k_max, self.block_size,
-            want_c=want_c or narrow, use_pallas=use)
+            want_c=True, use_pallas=use)
         val = val.astype(jnp.dtype(self.value_dtype))
         payload = (idx.astype(self.index_dtype), val, scale)
-        if narrow:
-            # the kernel's c holds the exact kept values; feed the narrow
-            # wire dtype's rounding into the error term (c + e_new == acc
-            # wherever mask_self participates)
-            c_q = self.unpack(payload)
-            e_new = jnp.where(mask_self > 0, c + e_new - c_q,
-                              e.astype(jnp.float32))
-            c = c_q
-        return payload, (c if want_c else None), e_new
+        # The kernel's c holds the exact kept values, but the receivers
+        # decode `values * scale` after the value-dtype rounding — and for
+        # f32 even the scale normalization round trip (v/s)*s is 1-2 ulp
+        # away.  The error vector must track the TRANSMITTED reconstruction
+        # (e_new = acc - C(acc) with C == unpack∘pack), or the production
+        # Algorithm 1 drifts from the reference EF loop step by step
+        # (caught by the reference-vs-mesh parity gate).  c + e_new == acc
+        # wherever mask_self participates, so no extra pass over acc —
+        # but the kernel must now always store c (want_c=False DCE given
+        # up) plus one unpack scatter; folding the value quantization into
+        # the kernels would win it back.
+        c_q = self.unpack(payload)
+        e_new = jnp.where(mask_self > 0, c + e_new - c_q,
+                          e.astype(jnp.float32))
+        return payload, (c_q if want_c else None), e_new
 
     def decode_reduce(self, payloads, sender_mask, use_pallas=None):
         idx, val, scales = payloads

@@ -35,6 +35,7 @@ __all__ = [
     "StochasticSign",
     "RandK",
     "Identity",
+    "WireCompressor",
     "get_compressor",
 ]
 
@@ -228,6 +229,33 @@ class RandK(Compressor):
     def wire_bits(self, n):
         k = min(self.k, n)
         return k * (32 + 32)
+
+
+@dataclasses.dataclass(frozen=True)
+class WireCompressor(Compressor):
+    """A `repro.core.collectives.WireFormat` as a reference-loop compressor.
+
+    `apply` is the wire's `roundtrip` — EXACTLY what the receivers of the
+    coded collective reconstruct, bit for bit, including the payload's
+    value-dtype and scale-normalization rounding.  This is the bridge that
+    keeps the repo at ONE Algorithm 1: the (N, D) reference EF loop run
+    with `WireCompressor(wire)` and the mesh `cocoef_update` on the same
+    wire produce identical trajectories (asserted by the parity gate,
+    `repro.launch.parity` / tests/test_algorithm_parity.py).
+
+    Wire formats are frozen dataclasses, so this is hashable and remains a
+    valid jit static argument wherever a `Compressor` is accepted.
+    """
+
+    wire: object                      # a collectives.WireFormat (required)
+
+    def apply(self, x, key=None):
+        shape, dtype = x.shape, x.dtype
+        return (self.wire.roundtrip(x.reshape(-1))
+                .reshape(shape).astype(dtype))
+
+    def wire_bits(self, n):
+        return 8 * int(self.wire.wire_bytes(n))
 
 
 _REGISTRY = {

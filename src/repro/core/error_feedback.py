@@ -20,7 +20,9 @@ from typing import Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 
+from repro.kernels.ref import mul_add
 from .compression import Compressor
 
 __all__ = [
@@ -70,6 +72,21 @@ def _coded_gradients(grad_fn: GradFn, theta: jnp.ndarray,
     return W @ per_subset
 
 
+def _masked_sum(mask: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """Server aggregate  sum_i mask_i * c_i  over the device axis (eq. 9),
+    accumulated IN DEVICE ORDER (i = 0..N-1, lax.scan) — the SAME
+    accumulation order the production collective's streaming decode_reduce
+    uses, so the reference loop and the mesh `cocoef_update` agree
+    BIT-FOR-BIT (the parity gate, repro.launch.parity) instead of up to
+    f32 reduction-order ulps of `(m * c).sum(0)`."""
+    m = mask.reshape((-1,) + (1,) * (c.ndim - 1)).astype(c.dtype)
+
+    def body(acc, inp):
+        mi, ci = inp
+        return acc + mi * ci, None
+    return lax.scan(body, jnp.zeros(c.shape[1:], c.dtype), (m, c))[0]
+
+
 def _per_device_keys(key: Optional[jax.Array], step, n: int):
     if key is None:
         return None
@@ -88,14 +105,17 @@ def cocoef_step(state: EFState, grad_fn: GradFn, W: jnp.ndarray,
     gamma may be a traced scalar (supports decaying-lr experiments, Fig. 6).
     """
     g = _coded_gradients(grad_fn, state.theta, W)          # (N, D)
-    acc = gamma * g + state.e                              # eq. (4) argument
+    # eq. (4) argument; mul_add = the ONE accumulate definition shared with
+    # the production kernels (two-rounding f32, no FMA contraction) so the
+    # parity gate can demand bit-for-bit trajectories
+    acc = mul_add(gamma, g, state.e)
     keys = _per_device_keys(key, step, g.shape[0])
     if keys is None:
         c = jax.vmap(lambda v: compressor.apply(v))(acc)
     else:
         c = jax.vmap(lambda v, k: compressor.apply(v, k))(acc, keys)
     m = mask.reshape((-1,) + (1,) * (acc.ndim - 1))
-    ghat = (m * c).sum(axis=0)                             # eq. (9)
+    ghat = _masked_sum(mask, c)                            # eq. (9)
     theta = state.theta - ghat                             # eq. (10)
     e = jnp.where(m > 0, acc - c, state.e)                 # eq. (7) / frozen
     return EFState(theta=theta, e=e)
@@ -114,8 +134,7 @@ def coco_step(state: EFState, grad_fn: GradFn, W: jnp.ndarray,
         c = jax.vmap(lambda v: compressor.apply(v))(acc)
     else:
         c = jax.vmap(lambda v, k: compressor.apply(v, k))(acc, keys)
-    m = mask.reshape((-1,) + (1,) * (acc.ndim - 1))
-    theta = state.theta - (m * c).sum(axis=0)
+    theta = state.theta - _masked_sum(mask, c)
     return EFState(theta=theta, e=state.e)
 
 
@@ -132,8 +151,7 @@ def unbiased_step(state: EFState, grad_fn: GradFn, W: jnp.ndarray,
         q = jax.vmap(lambda v: compressor.apply(v))(g)
     else:
         q = jax.vmap(lambda v, k: compressor.apply(v, k))(g, keys)
-    m = mask.reshape((-1,) + (1,) * (g.ndim - 1))
-    theta = state.theta - gamma * (m * q).sum(axis=0)
+    theta = state.theta - gamma * _masked_sum(mask, q)
     return EFState(theta=theta, e=state.e)
 
 
@@ -161,7 +179,7 @@ def unbiased_diff_step(state: DiffState, grad_fn: GradFn, W: jnp.ndarray,
     else:
         q = jax.vmap(lambda v, k: compressor.apply(v, k))(diff, keys)
     m = mask.reshape((-1,) + (1,) * (g.ndim - 1))
-    q_sum = (m * q).sum(axis=0)
+    q_sum = _masked_sum(mask, q)
     ghat = state.H + q_sum
     theta = state.theta - gamma * ghat
     h = jnp.where(m > 0, state.h + alpha * q, state.h)
@@ -174,6 +192,5 @@ def uncompressed_step(state: EFState, grad_fn: GradFn, W: jnp.ndarray,
                       step: jax.Array | int = 0) -> EFState:
     """Stochastic gradient coding [31]: dense coded vectors, no compression."""
     g = _coded_gradients(grad_fn, state.theta, W)
-    m = mask.reshape((-1,) + (1,) * (g.ndim - 1))
-    theta = state.theta - gamma * (m * g).sum(axis=0)
+    theta = state.theta - gamma * _masked_sum(mask, g)
     return EFState(theta=theta, e=state.e)

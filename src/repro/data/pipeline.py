@@ -22,7 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 __all__ = ["SyntheticLMConfig", "synthetic_lm_batch", "subset_batch_for_rank",
-           "host_stream"]
+           "coded_train_batch", "host_stream"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,6 +71,32 @@ def subset_batch_for_rank(key: jax.Array, step, subset_ids: np.ndarray,
         batches.append(toks)
         weights.append(jnp.full((per_subset,), w, jnp.float32))
     return jnp.concatenate(batches, 0), jnp.concatenate(weights, 0)
+
+
+def coded_train_batch(key: jax.Array, step, allocation, W, per_subset: int,
+                      seq_len: int, vocab: int
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One GLOBAL coded batch for the mesh train step, straight from the
+    synthetic pipeline: (tokens (N_code, b_loc, L+1) i32,
+    weights (N_code, b_loc) f32).
+
+    Rank i's rows are the union of its allocated subsets
+    (`subset_batch_for_rank`); subset k's tokens are keyed by the subset id
+    alone, so every rank holding k regenerates the IDENTICAL rows without
+    coordination (the redundant computation of Sec. III), and the
+    per-example weight folds the encode weight W[i, k] / per_subset so
+    stage 1's weighted backward pass IS the coded sum of eq. 3.  Feed the
+    SAME W the trainer aggregates with (rate-aware or mean-rate)."""
+    Wn = np.asarray(W)
+    toks, wts = [], []
+    for i in range(allocation.num_devices):
+        sids = allocation.subsets_of(i)
+        t, w = subset_batch_for_rank(key, step, sids,
+                                     Wn[i, sids] / per_subset,
+                                     per_subset, seq_len, vocab)
+        toks.append(t)
+        wts.append(w)
+    return jnp.stack(toks), jnp.stack(wts)
 
 
 def host_stream(cfg: SyntheticLMConfig, start_step: int = 0

@@ -87,9 +87,10 @@ def ef_topk_fused(g, e, gamma, mask_self, k: int, block_size: int,
 
 
 def dense_decode_reduce(values, mask, use_pallas=None):
-    # no Pallas variant: the masked sum is a single fused XLA reduction and
-    # the payload carries no decode step to fuse with
-    return ref.dense_decode_reduce_ref(values, mask)
+    # no Pallas variant: the payload carries no decode step to fuse with.
+    # The scan variant keeps the canonical sender-order accumulation every
+    # other wire's decode path uses (reference-vs-mesh parity).
+    return ref.dense_decode_reduce_scan(values, mask)
 
 
 def block_topk(x, k: int, block_size: int, use_pallas=None):

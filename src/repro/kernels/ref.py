@@ -12,6 +12,19 @@ import jax
 import jax.numpy as jnp
 
 
+def mul_add(gamma, g: jnp.ndarray, e: jnp.ndarray) -> jnp.ndarray:
+    """THE Algorithm-1 accumulate  acc = gamma * g + e  with the multiply
+    and the add kept as two separately-rounded IEEE f32 ops (the
+    optimization_barrier blocks XLA's FMA contraction).  Every
+    implementation of the accumulate — the reference (N, D) EF loop, the
+    jnp fused kernels here, and the per-rank-budget path of cocoef_update —
+    routes through this one definition, so their accumulators agree
+    BIT-FOR-BIT instead of drifting an FMA-ulp apart depending on the
+    surrounding fusion (caught by repro.launch.parity)."""
+    return jax.lax.optimization_barrier(
+        gamma * g.astype(jnp.float32)) + e.astype(jnp.float32)
+
+
 def sign_pack_ref(x: jnp.ndarray, group_size: int
                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """x: (n,) f32 -> (words (n/32,) u32, scales (n/g,) f32).
@@ -40,7 +53,7 @@ def ef_sign_fused_ref(g: jnp.ndarray, e: jnp.ndarray, gamma, mask_self,
       e_new = mask_self ? acc - c : e
     Returns (words, scales, c, e_new)."""
     ef = e.astype(jnp.float32)
-    accg = (gamma * g.astype(jnp.float32) + ef).reshape(-1, group_size)
+    accg = mul_add(gamma, g, e).reshape(-1, group_size)
     scales = jnp.mean(jnp.abs(accg), axis=-1)
     bits = (accg.reshape(-1, 32) >= 0).astype(jnp.uint32)
     words = (bits << jnp.arange(32, dtype=jnp.uint32)).sum(-1, dtype=jnp.uint32)
@@ -104,8 +117,7 @@ def ef_topk_fused_ref(g: jnp.ndarray, e: jnp.ndarray, gamma, mask_self,
           reapplies values * scale, 1-2 ulp away)
       e_new = mask_self ? acc - c : e
     Returns (indices, values, scales, c, e_new)."""
-    accb = (gamma * g.astype(jnp.float32)
-            + e.astype(jnp.float32)).reshape(-1, block_size)
+    accb = mul_add(gamma, g, e).reshape(-1, block_size)
     mag = jnp.abs(accb)
     topv, idx = jax.lax.top_k(mag, k)
     sv = jnp.take_along_axis(accb, idx, axis=-1)
@@ -126,6 +138,21 @@ def dense_decode_reduce_ref(values: jnp.ndarray, mask: jnp.ndarray
     """Dense-wire decode+aggregate: values (N, n) any float dtype,
     mask (N,) -> sum_i mask_i * f32(values_i)   (n,)."""
     return (mask[:, None] * values.astype(jnp.float32)).sum(0)
+
+
+def dense_decode_reduce_scan(values: jnp.ndarray, mask: jnp.ndarray
+                             ) -> jnp.ndarray:
+    """Streaming variant of `dense_decode_reduce_ref` with the SAME
+    sender-order accumulation the sign/topk scan decoders use (XLA's .sum(0)
+    may reduce pairwise — a different rounding).  This is the backend's jnp
+    decode path so every wire aggregates in one canonical order."""
+    n = values.shape[1]
+
+    def body(acc, inp):
+        v, m = inp
+        return acc + m * v.astype(jnp.float32), None
+    return jax.lax.scan(body, jnp.zeros((n,), jnp.float32),
+                        (values, mask))[0]
 
 
 def topk_unpack_ref(indices: jnp.ndarray, values: jnp.ndarray,

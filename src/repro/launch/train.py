@@ -42,14 +42,15 @@ from repro.optim import OptimizerConfig, apply_update, init_opt_state, \
 from repro.sharding import ctx, rules
 from repro.sim import stragglers
 
-__all__ = ["TrainRun", "build_train_setup"]
+__all__ = ["TrainRun", "build_train_setup", "setup_encode_weights"]
 
 
 @dataclasses.dataclass(frozen=True)
 class TrainRun:
     mode: str = "cocoef"             # cocoef | coco | dense
     base_lr: float = 1e-3
-    schedule: str = "constant"
+    schedule: str = "constant"       # constant | rsqrt | cosine
+    schedule_total: Optional[int] = None  # cosine: decay horizon (steps)
     warmup: int = 0
     optimizer: OptimizerConfig = OptimizerConfig()
     compressor: Optional[str] = None  # override spec.coding.compressor
@@ -79,6 +80,10 @@ class TrainRun:
         if self.mode not in ("cocoef", "coco", "dense"):
             raise ValueError(f"unknown mode {self.mode!r}; "
                              f"have ('cocoef', 'coco', 'dense')")
+        # schedule knobs validate at construction (lr_schedule re-checks):
+        # a TrainRun that would die inside jit tracing is rejected here
+        lr_schedule(self.schedule, self.base_lr, self.warmup,
+                    self.schedule_total)
         if self.straggler not in stragglers.STRAGGLER_PROCESSES:
             raise ValueError(
                 f"unknown straggler process {self.straggler!r}; "
@@ -232,7 +237,8 @@ def build_train_setup(spec: ArchSpec, mesh: Mesh, shape: ShapeCfg,
     state_spec = P(*mesh.axis_names, None)
     state_sharding = NamedSharding(mesh, state_spec)
 
-    gamma_fn = lr_schedule(run.schedule, run.base_lr, run.warmup)
+    gamma_fn = lr_schedule(run.schedule, run.base_lr, run.warmup,
+                           run.schedule_total)
     n_opt = len(init_opt_state(run.optimizer, 1))
 
     # ---- batch specs -------------------------------------------------------
@@ -391,41 +397,38 @@ def build_train_setup(spec: ArchSpec, mesh: Mesh, shape: ShapeCfg,
         straggler_process=straggler_proc)
 
 
+def setup_encode_weights(setup: TrainSetup) -> jnp.ndarray:
+    """THE (N_code, M) encode weights the trainer aggregates with:
+    rate-aware (per-rank q_i) when the setup carries straggler rates, else
+    mean-rate eq. 3.  Every batch maker (make_batch_for_step, the fig10
+    model-zoo sweep) must fold THIS W so stage 1 weights the examples with
+    exactly the coding the stage-2 aggregation assumes."""
+    if setup.cocoef_cfg.straggler_rates is not None:
+        return coding.encode_weights(
+            setup.allocation, rates=setup.cocoef_cfg.straggler_rates)
+    return coding.encode_weights(setup.allocation,
+                                 setup.cocoef_cfg.straggler_p)
+
+
 def make_batch_for_step(setup: TrainSetup, spec: ArchSpec, shape: ShapeCfg,
                         key, step: int, smoke: bool = False):
-    """Materialize a real global batch (smoke/integration runs)."""
+    """Materialize a real global batch (smoke/integration runs).
+
+    Tokens and the coded per-example weights come from ONE batch maker —
+    `data.pipeline.coded_train_batch` — so the W/per_subset folding that
+    realizes eq. 3 in stage 1 lives in a single place (shared with the
+    fig10 model-zoo sweep) and cannot drift between entry points."""
+    from repro.data import pipeline
+
     cfg = spec.smoke if smoke else spec.config
     n_code, b_loc, seq = setup.n_code, setup.b_loc, setup.seq_len
-    # fold the SAME encode weights the trainer aggregates with: rate-aware
-    # (per-rank q_i) when the setup carries rates, else mean-rate eq. 3
-    if setup.cocoef_cfg.straggler_rates is not None:
-        W = np.asarray(coding.encode_weights(
-            setup.allocation, rates=setup.cocoef_cfg.straggler_rates))
-    else:
-        W = np.asarray(coding.encode_weights(
-            setup.allocation, setup.cocoef_cfg.straggler_p))
+    W = setup_encode_weights(setup)
     per_subset = max(1, shape.global_batch // setup.allocation.num_subsets)
-
-    toks = []
-    weights = []
-    for i in range(n_code):
-        sids = setup.allocation.subsets_of(i)
-        rows = []
-        wrow = []
-        for sid in sids:
-            sk = jax.random.fold_in(jax.random.fold_in(key, int(sid)),
-                                    np.uint32(step))
-            rows.append(jax.random.randint(sk, (per_subset, seq + 1), 0,
-                                           cfg.vocab_size, dtype=jnp.int32))
-            wrow.append(jnp.full((per_subset,),
-                                 W[i, sid] / per_subset, jnp.float32))
-        toks.append(jnp.concatenate(rows, 0))
-        weights.append(jnp.concatenate(wrow, 0))
-    inputs = jnp.stack(toks)
-    wts = jnp.stack(weights)
+    toks, wts = pipeline.coded_train_batch(key, step, setup.allocation, W,
+                                           per_subset, seq, cfg.vocab_size)
     if cfg.input_mode == "tokens":
-        return {"inputs": inputs, "weights": wts}
+        return {"inputs": toks, "weights": wts}
     emb = jax.random.normal(key, (n_code, b_loc, seq, cfg.d_model),
                             jnp.bfloat16) * 0.02
-    tgt = inputs[..., :-1]
+    tgt = toks[..., :-1]
     return {"inputs": emb, "targets": tgt, "weights": wts}

@@ -1,2 +1,2 @@
-from .optimizers import (OptimizerConfig, init_opt_state, apply_update,
-                         lr_schedule)  # noqa: F401
+from .optimizers import (OptimizerConfig, SCHEDULES, init_opt_state,
+                         apply_update, lr_schedule)  # noqa: F401

@@ -40,15 +40,20 @@ def init_opt_state(cfg: OptimizerConfig, n: int):
 def apply_update(cfg: OptimizerConfig, params_flat, ghat, state, step,
                  gamma):
     """params_flat: (n,) f32 local; ghat: aggregated update (incl. gamma).
-    Returns (new_params, new_state)."""
-    if cfg.weight_decay:
-        ghat = ghat + cfg.weight_decay * gamma * params_flat
+    Returns (new_params, new_state).
+
+    Weight decay is DECOUPLED (AdamW): the decay term
+    `weight_decay * gamma * params` is subtracted at the parameter update
+    only and never enters the gradient estimate, so the momentum buffer and
+    Adam's moments m/v are identical with and without decay."""
+    decay = (cfg.weight_decay * gamma * params_flat if cfg.weight_decay
+             else 0.0)
     if cfg.kind == "sgd":
-        return params_flat - ghat, state
+        return params_flat - ghat - decay, state
     if cfg.kind == "momentum":
         (m,) = state
         m = cfg.momentum * m + ghat
-        return params_flat - m, (m,)
+        return params_flat - m - decay, (m,)
     if cfg.kind == "adam":
         m, v = state
         g = ghat / jnp.maximum(gamma, 1e-20)   # undo lr for the estimate
@@ -57,24 +62,43 @@ def apply_update(cfg: OptimizerConfig, params_flat, ghat, state, step,
         t = step.astype(jnp.float32) + 1.0
         mh = m / (1 - cfg.beta1 ** t)
         vh = v / (1 - cfg.beta2 ** t)
-        return params_flat - gamma * mh / (jnp.sqrt(vh) + cfg.eps), (m, v)
+        return (params_flat - gamma * mh / (jnp.sqrt(vh) + cfg.eps) - decay,
+                (m, v))
     raise ValueError(cfg.kind)
+
+
+SCHEDULES = ("constant", "rsqrt", "cosine")
 
 
 def lr_schedule(kind: str, base: float, warmup: int = 0,
                 total: Optional[int] = None):
     """Returns gamma(step).  'constant' is the paper's setting (Sec. V);
-    'rsqrt' matches the decaying scheme of Fig. 6; 'cosine' for production."""
+    'rsqrt' matches the decaying scheme of Fig. 6; 'cosine' for production
+    (needs `total`, the step count the cosine decays over).
+
+    Knobs are validated HERE, at construction (same pattern as
+    `TrainRun.__post_init__`): a bad combination raises ValueError before
+    any tracing instead of dying on an assert inside jit."""
+    if kind not in SCHEDULES:
+        raise ValueError(f"unknown lr schedule {kind!r}; have {SCHEDULES}")
+    if warmup < 0:
+        raise ValueError(f"warmup={warmup} must be >= 0 steps")
+    if kind == "cosine" and (total is None or total < 1):
+        raise ValueError(
+            f"cosine schedule needs total >= 1 decay steps, got {total!r} "
+            f"(set TrainRun.schedule_total)")
+
     def f(step):
         s = jnp.asarray(step, jnp.float32)
         g = jnp.asarray(base, jnp.float32)
         if kind == "rsqrt":
             g = g / jnp.sqrt(s + 1.0)
         elif kind == "cosine":
-            assert total is not None
-            frac = jnp.clip(s / max(total, 1), 0.0, 1.0)
+            frac = jnp.clip(s / total, 0.0, 1.0)
             g = g * 0.5 * (1 + jnp.cos(jnp.pi * frac))
         if warmup > 0:
+            # (s+1)/warmup clipped to 1: full lr from step warmup-1 on, no
+            # 0-division and no zero step at s=0
             g = g * jnp.clip((s + 1.0) / warmup, 0.0, 1.0)
         return g
     return f

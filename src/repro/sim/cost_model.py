@@ -115,6 +115,21 @@ class ComputeProfile:
         return cls(grad_s=flops_per_step / (device_flops * mfu),
                    speed_factors=speed_factors)
 
+    @classmethod
+    def from_compiled_hlo(cls, hlo_text: str, ndev: int,
+                          device_flops: float = 1e14, mfu: float = 0.4,
+                          speed_factors: Tuple[float, ...] = ()
+                          ) -> "ComputeProfile":
+        """Per-model compute profile from a compiled train step: the
+        while-aware `repro.launch.hlo_cost` flop count of the optimized HLO
+        (per device) through `from_flops`.  This is how the model-zoo sweep
+        (benchmarks/fig10_model_zoo.py) replaces the fixed 5 ms default
+        with architecture-dependent step compute."""
+        from repro.launch import hlo_cost   # lazy: sim must not pull launch
+        cost = hlo_cost.analyze(hlo_text, ndev)
+        return cls.from_flops(cost.flops, device_flops=device_flops,
+                              mfu=mfu, speed_factors=speed_factors)
+
     def rank_seconds(self, num_devices: int) -> np.ndarray:
         if not self.speed_factors:
             return np.full((num_devices,), self.grad_s)

@@ -1,0 +1,129 @@
+"""Server-optimizer semantics: decoupled weight decay + schedule validation.
+
+Regression suite for two PR-5 bugfixes:
+  * `apply_update` used to fold `weight_decay * gamma * params` into ghat
+    BEFORE Adam divided by gamma and fed the moments — L2-through-moments
+    (and through the momentum buffer), not AdamW.  Decay is now decoupled:
+    it must not change the moment estimates at all.
+  * `lr_schedule("cosine", total=None)` used to die on a bare `assert`
+    inside jit tracing; schedule knobs now validate at construction.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import (OptimizerConfig, SCHEDULES, apply_update,
+                         init_opt_state, lr_schedule)
+
+N = 64
+GAMMA = 0.1
+WD = 0.01
+
+
+def _inputs(seed=0):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    return (jax.random.normal(k1, (N,)), jax.random.normal(k2, (N,)) * 0.1)
+
+
+def _run(kind, wd, steps=5):
+    cfg = OptimizerConfig(kind=kind, weight_decay=wd)
+    params, _ = _inputs()
+    state = init_opt_state(cfg, N)
+    states, trajectory = [], []
+    for t in range(steps):
+        _, ghat = _inputs(seed=100 + t)
+        params, state = apply_update(cfg, params, GAMMA * ghat, state,
+                                     jnp.int32(t), GAMMA)
+        states.append(state)
+        trajectory.append(params)
+    return trajectory, states
+
+
+@pytest.mark.parametrize("kind", ["momentum", "adam"])
+def test_weight_decay_never_touches_moments(kind):
+    """THE regression: with decoupled decay the optimizer state (momentum
+    buffer / Adam m, v) is BIT-FOR-BIT identical with and without decay."""
+    _, states0 = _run(kind, wd=0.0)
+    _, statesw = _run(kind, wd=WD)
+    for s0, sw in zip(states0, statesw):
+        for a, b in zip(s0, sw):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("kind", ["sgd", "momentum", "adam"])
+def test_weight_decay_is_decoupled_at_the_update(kind):
+    """One step from the same state: params(wd) == params(0) - wd*gamma*p
+    exactly (the decay enters nowhere else)."""
+    params, ghat = _inputs()
+    state = init_opt_state(OptimizerConfig(kind=kind), N)
+    p0, _ = apply_update(OptimizerConfig(kind=kind), params, ghat, state,
+                         jnp.int32(0), GAMMA)
+    pw, _ = apply_update(OptimizerConfig(kind=kind, weight_decay=WD),
+                         params, ghat, state, jnp.int32(0), GAMMA)
+    np.testing.assert_array_equal(np.asarray(pw),
+                                  np.asarray(p0 - WD * GAMMA * params))
+
+
+def test_adam_decay_shrinks_params_without_biasing_direction():
+    """Sanity: with zero gradient, Adam + decay is pure shrinkage."""
+    cfg = OptimizerConfig(kind="adam", weight_decay=WD)
+    params, _ = _inputs()
+    state = init_opt_state(cfg, N)
+    p1, (m, v) = apply_update(cfg, params, jnp.zeros((N,)), state,
+                              jnp.int32(0), GAMMA)
+    np.testing.assert_allclose(np.asarray(p1),
+                               np.asarray(params * (1 - WD * GAMMA)),
+                               rtol=1e-6)
+    assert float(jnp.abs(m).max()) == 0.0
+    assert float(jnp.abs(v).max()) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# schedule validation + step-0 behavior
+# ---------------------------------------------------------------------------
+
+def test_cosine_without_total_raises_at_construction():
+    with pytest.raises(ValueError, match="cosine"):
+        lr_schedule("cosine", 1e-3)
+    with pytest.raises(ValueError, match="cosine"):
+        lr_schedule("cosine", 1e-3, total=0)
+
+
+def test_unknown_schedule_and_bad_warmup_raise():
+    with pytest.raises(ValueError, match="unknown lr schedule"):
+        lr_schedule("linear", 1e-3)
+    with pytest.raises(ValueError, match="warmup"):
+        lr_schedule("constant", 1e-3, warmup=-1)
+
+
+@pytest.mark.parametrize("kind", SCHEDULES)
+@pytest.mark.parametrize("warmup", [0, 1, 10])
+def test_every_schedule_finite_at_step0(kind, warmup):
+    """All three schedules x warmup at step 0: finite, positive, no
+    0-division, warmup factor clipped to 1 (jitted — the setting the old
+    bare assert died in)."""
+    base = 1e-3
+    f = lr_schedule(kind, base, warmup=warmup, total=100)
+    g0 = float(jax.jit(f)(jnp.int32(0)))
+    assert np.isfinite(g0) and g0 > 0.0
+    expect = base * (min(1.0, 1.0 / warmup) if warmup > 0 else 1.0)
+    if kind == "constant":
+        np.testing.assert_allclose(g0, expect, rtol=1e-6)
+    else:
+        assert g0 <= expect * (1 + 1e-6)
+    # far past warmup + decay horizon: still finite, warmup factor == 1
+    g_late = float(jax.jit(f)(jnp.int32(1000)))
+    assert np.isfinite(g_late) and g_late >= 0.0
+    if kind == "constant" and warmup:
+        np.testing.assert_allclose(g_late, base, rtol=1e-6)
+
+
+def test_trainrun_validates_schedule_at_construction():
+    from repro.launch.train import TrainRun
+    with pytest.raises(ValueError, match="cosine"):
+        TrainRun(schedule="cosine")
+    with pytest.raises(ValueError, match="unknown lr schedule"):
+        TrainRun(schedule="nope")
+    run = TrainRun(schedule="cosine", schedule_total=1000, warmup=10)
+    assert run.schedule_total == 1000
