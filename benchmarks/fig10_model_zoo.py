@@ -79,11 +79,15 @@ _SMOKE_CODING = dict(group_size=32, block_size=64, k_per_block=4,
                      straggler_p=P_STRAG)
 
 
-def _train_run(wire_name: str, straggler: str) -> TrainRun:
+def _train_run(wire_name: str, straggler: str,
+               num_buckets: int = 1, overlap: bool = False) -> TrainRun:
     if wire_name == "dense":
         return TrainRun(mode="dense", base_lr=1e-2, straggler=straggler,
                         straggler_burst=4.0, straggler_spread=0.5)
+    # the schedule the cost model prices must be the one the mesh runs
     return TrainRun(mode="cocoef", compressor=wire_name, base_lr=1e-2,
+                    num_buckets=num_buckets,
+                    bucket_schedule="pipelined" if overlap else "serial",
                     straggler=straggler, straggler_burst=4.0,
                     straggler_spread=0.5)
 
@@ -96,7 +100,8 @@ def _timer_wire(setup, wire_name: str):
 
 
 def run_cell(arch: str, wire_name: str, straggler: str, mesh, shape, *,
-             T: int, trials: int, link=DEFAULT_LINK) -> dict:
+             T: int, trials: int, link=DEFAULT_LINK,
+             num_buckets: int = 1, overlap: bool = False) -> dict:
     """One (arch, wire, straggler) cell: compile the real train step,
     derive the per-model compute profile from its HLO, train `trials`
     runs of `T` steps, and join the loss histories to the simulated
@@ -108,7 +113,8 @@ def run_cell(arch: str, wire_name: str, straggler: str, mesh, shape, *,
     if cfg.input_mode != "tokens":
         raise ValueError(f"{arch}: fig10 feeds token batches from "
                          f"data.pipeline (input_mode={cfg.input_mode!r})")
-    run = _train_run(wire_name, straggler)
+    run = _train_run(wire_name, straggler, num_buckets=num_buckets,
+                     overlap=overlap)
     setup = build_train_setup(spec, mesh, shape, run, smoke=True)
     proc = setup.straggler_process
     assert proc is not None, "straggler_p > 0 must build a process"
@@ -127,7 +133,12 @@ def run_cell(arch: str, wire_name: str, straggler: str, mesh, shape, *,
     n_model = ndev // max(setup.n_code, 1)
     n_wire = setup.flat_pad * n_model          # coords/coding rank on wire
     wire = _timer_wire(setup, wire_name)
-    timer = StepTimer(wire=wire, n=n_wire, link=link, compute=compute)
+    # dense cells keep the single-shot aggregation: bucketing is a knob of
+    # the coded cocoef path, and pricing it on an un-bucketed wire would
+    # claim overlap the mesh step never performs
+    nb = 1 if wire_name == "dense" else num_buckets
+    timer = StepTimer(wire=wire, n=n_wire, link=link, compute=compute,
+                      num_buckets=nb, overlap=overlap and nb > 1)
 
     per_trial = []
     for s in range(trials):
@@ -177,7 +188,8 @@ def _cells(smoke: bool):
     return cells
 
 
-def run(T=60, trials=2, smoke=False, link=DEFAULT_LINK, out_dir=None):
+def run(T=60, trials=2, smoke=False, link=DEFAULT_LINK,
+        num_buckets=1, overlap=False, out_dir=None):
     if smoke:
         T, trials = 12, 1
     mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
@@ -188,6 +200,7 @@ def run(T=60, trials=2, smoke=False, link=DEFAULT_LINK, out_dir=None):
                     "mesh": dict(zip(mesh.axis_names, mesh.devices.shape)),
                     "p_straggler": P_STRAG,
                     "device_flops": DEVICE_FLOPS, "mfu": MFU,
+                    "num_buckets": num_buckets, "overlap": overlap,
                     "link": dataclasses.asdict(link),
                     "cells": [list(c) for c in cells],
                     "trimmed": smoke},
@@ -196,7 +209,8 @@ def run(T=60, trials=2, smoke=False, link=DEFAULT_LINK, out_dir=None):
     for arch, wire_name, strag in cells:
         print(f"[fig10] {arch} x {wire_name} x {strag} ...", flush=True)
         cell = run_cell(arch, wire_name, strag, mesh, shape, T=T,
-                        trials=trials, link=link)
+                        trials=trials, link=link,
+                        num_buckets=num_buckets, overlap=overlap)
         res["curves"].setdefault(arch, {}).setdefault(strag, {})[
             wire_name] = cell.pop("curve")
         # keyed per CELL: the straggler process is compiled into the step
@@ -247,6 +261,13 @@ def main():
                          "sweep")
     ap.add_argument("--steps", type=int, default=60)
     ap.add_argument("--trials", type=int, default=2)
+    ap.add_argument("--num-buckets", type=int, default=1,
+                    help="flat-vector buckets for the coded wires: the "
+                         "mesh step runs the bucketed schedule AND the "
+                         "cost model prices it")
+    ap.add_argument("--overlap", action="store_true",
+                    help="pipelined bucket schedule (train step) + "
+                         "overlap-aware aggregation pricing (cost model)")
     ap.add_argument("--out", default=None,
                     help="output directory (default: $REPRO_RESULTS_DIR "
                          "or results/repro)")
@@ -254,6 +275,7 @@ def main():
     if args.parity:
         raise SystemExit(0 if run_parity_gate() else 1)
     res = run(T=args.steps, trials=args.trials, smoke=args.smoke,
+              num_buckets=args.num_buckets, overlap=args.overlap,
               out_dir=args.out)
     for arch, by_strag in res["summary"].items():
         rng = R.fmt_ms_range(*R.compute_range_ms(res["compute"][arch]))

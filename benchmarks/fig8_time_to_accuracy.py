@@ -75,11 +75,12 @@ def _processes(N, p, smoke=False):
 
 def run(trials=3, T=400, N=100, p=0.2, gamma=1e-5, record_every=20,
         n_wire=N_WIRE, link=DEFAULT_LINK, compute=DEFAULT_COMPUTE,
-        smoke=False, out_dir=None):
+        num_buckets=1, overlap=False, smoke=False, out_dir=None):
     if smoke:
         trials, T, N, record_every = 1, 60, 20, 5
     res = {"meta": {"n_wire": n_wire, "p": p, "trials": trials, "T": T,
                     "N": N, "gamma": gamma,
+                    "num_buckets": num_buckets, "overlap": overlap,
                     "link": dataclasses.asdict(link),
                     "compute": dataclasses.asdict(compute),
                     "wire_bytes_up_per_rank": {
@@ -90,7 +91,8 @@ def run(trials=3, T=400, N=100, p=0.2, gamma=1e-5, record_every=20,
     for pname, proc in _processes(N, p, smoke=smoke).items():
         curves = {}
         for mname, (method, comp, d, wire) in METHODS.items():
-            timer = StepTimer(wire=wire, n=n_wire, link=link, compute=compute)
+            timer = StepTimer(wire=wire, n=n_wire, link=link, compute=compute,
+                              num_buckets=num_buckets, overlap=overlap)
             per_trial = []
             for s in range(trials):
                 grad_fn, loss_fn, theta0, _ = R.tasks.linreg_task(
@@ -125,11 +127,20 @@ def main():
                          "20 ranks)")
     ap.add_argument("--trials", type=int, default=3)
     ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--num-buckets", type=int, default=1,
+                    help="flat-vector buckets the cost model splits the "
+                         "aggregation into (matches CocoEFConfig)")
+    ap.add_argument("--overlap", action="store_true",
+                    help="time the PIPELINED bucket schedule: per-bucket "
+                         "pack/uplink/downlink stages overlap, so the "
+                         "aggregation costs max-stage instead of "
+                         "sum-of-stages per extra bucket")
     ap.add_argument("--out", default=None,
                     help="output directory (default: $REPRO_RESULTS_DIR "
                          "or results/repro)")
     args = ap.parse_args()
     res = run(trials=args.trials, T=args.steps, smoke=args.smoke,
+              num_buckets=args.num_buckets, overlap=args.overlap,
               out_dir=args.out)
     for pname, s in res["summary"].items():
         t2t = ", ".join(

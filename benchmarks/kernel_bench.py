@@ -2,26 +2,45 @@
 
 Every `*_local_step` pair times the SAME math two ways:
 
-  unfused — the pre-backend-layer train path: accumulate (gamma*g + e),
+  unfused — the pre-backend-layer train path: accumulate (ref.mul_add),
             pack, unpack, error-update as four separately-jitted stages,
-            each a full HBM round-trip over the model-sized vector.
-  fused   — the `WireFormat.fused_local_step` entry point the train path
-            now calls (kernels.ops dispatch: Pallas on TPU, single-fusion
-            jnp reference elsewhere).
+            each a full HBM round-trip over the model-sized vector.  The
+            stages are the kernels/ref.py oracles (barrier-free), so this
+            arm also exhibits THE perf bug the fused path fixes: XLA:CPU
+            re-materializes `lax.top_k`'s sort once per consumer fusion.
+  fused   — the `kernels.ops` entry point the train path calls, dispatched
+            exactly like `WireFormat.fused_local_step` does (tile-guarded
+            `resolve_use_pallas`).
 
 Decode pairs compare the vmapped dense unpack + masked sum (unfused)
-against the fused decode_reduce.  Numbers on CPU are for relative
-comparison; Pallas engages on TPU.  Writes BENCH_kernels.json so the perf
-trajectory is tracked across PRs (CI uploads it as an artifact).
+against the fused decode_reduce.
+
+Honesty guarantees (this file used to lack both):
+  * every pair is VERIFIED before it is timed — float outputs must
+    allclose and the top-k index SETS must match exactly per block; a
+    mismatch aborts the bench with a nonzero exit instead of publishing
+    timings of two different computations;
+  * each row records `backend_requested` (the --backend flag) AND
+    `backend_ran` ("jnp" | "pallas" | "pallas-interpret") — the tile
+    guard can silently reject a shape, and a "pallas" number that really
+    measured the jnp path is worse than no number.
+
+`--min-speedup name=floor` turns the bench into a CI regression gate:
+exit 1 if any named row's fused/unfused speedup drops below its floor.
+Writes BENCH_kernels.json so the perf trajectory is tracked across PRs.
 """
 import argparse
 import json
+import sys
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import ops, ref
+from repro.kernels.sign_pack import G_BLK as _SIGN_G_BLK
+from repro.kernels.topk_pack import R_BLK as _TOPK_R_BLK
 
 N_DEFAULT = 1 << 22     # 4M-element gradient slice
 GROUP = 512
@@ -57,21 +76,50 @@ def _pipeline(*stages):
     return run_all
 
 
-def run(n: int = N_DEFAULT, iters: int = 20):
-    """Paired jnp-vs-fused timings; returns a list of row dicts."""
+def _ran(use: bool) -> str:
+    if not use:
+        return "jnp"
+    return "pallas" if jax.default_backend() == "tpu" else "pallas-interpret"
+
+
+def _check(name, label, ok):
+    if not ok:
+        print(f"VERIFY FAILED [{name}] {label}: fused and unfused arms "
+              f"disagree — refusing to time two different computations",
+              file=sys.stderr)
+        raise SystemExit(2)
+
+
+def _close(a, b, tol=1e-6):
+    a, b = np.asarray(a, np.float64), np.asarray(b, np.float64)
+    return bool(np.allclose(a, b, rtol=tol, atol=tol))
+
+
+def _same_index_sets(ia, ib):
+    """Exact per-block SET equality: order may differ only within ties,
+    but the selected coordinates must be identical."""
+    ia, ib = np.asarray(ia), np.asarray(ib)
+    return bool(np.array_equal(np.sort(ia, -1), np.sort(ib, -1)))
+
+
+def run(n: int = N_DEFAULT, iters: int = 20, backend: str = "auto"):
+    """Paired unfused-vs-fused timings; returns a list of row dicts.
+    Every pair is verified (allclose + exact index sets) before timing."""
     gamma, mask_self = 0.01, 1.0
+    use_req = ops.backend_use_pallas(backend)
     x = jax.random.normal(jax.random.PRNGKey(0), (n,))
     e = jax.random.normal(jax.random.PRNGKey(1), (n,)) * 0.1
     rows = []
 
-    def pair(name, unfused_us, fused_us):
+    def pair(name, ran, unfused_us, fused_us):
         rows.append({"name": name, "n": n,
+                     "backend_requested": backend, "backend_ran": ran,
                      "jnp_unfused_us": round(unfused_us, 1),
                      "fused_us": round(fused_us, 1),
                      "speedup": round(unfused_us / fused_us, 2)})
 
     # ---- sign wire: fused local step (EF + pack + c) ----------------------
-    acc_fn = jax.jit(lambda g, ee: (gamma * g + ee, g, ee))
+    acc_fn = jax.jit(lambda g, ee: (ref.mul_add(gamma, g, ee), g, ee))
     pack_fn = jax.jit(lambda a, g, ee: ref.sign_pack_ref(a, GROUP)
                       + (a, ee))
     unpack_fn = jax.jit(lambda w, s, a, ee:
@@ -79,13 +127,20 @@ def run(n: int = N_DEFAULT, iters: int = 20):
     enew_fn = jax.jit(lambda c, w, s, a, ee:
                       (w, s, c, jnp.where(mask_self > 0, a - c, ee)))
     unfused = _pipeline(acc_fn, pack_fn, unpack_fn, enew_fn)
+    s_use = ops.resolve_use_pallas(use_req, n, _SIGN_G_BLK * GROUP)
     fused = jax.jit(lambda g, ee: ops.ef_sign_fused(g, ee, gamma, mask_self,
-                                                    GROUP))
-    pair("ef_sign_local_step",
+                                                    GROUP, use_pallas=s_use))
+    uw, us_, uc, ue = unfused(x, e)
+    fw, fs, fc, fe = fused(x, e)
+    _check("ef_sign_local_step", "sign words", np.array_equal(uw, fw))
+    _check("ef_sign_local_step", "scales", _close(us_, fs))
+    _check("ef_sign_local_step", "c", _close(uc, fc))
+    _check("ef_sign_local_step", "e_new", _close(ue, fe))
+    pair("ef_sign_local_step", _ran(s_use),
          _time(unfused, x, e, iters=iters), _time(fused, x, e, iters=iters))
 
     # ---- sparse wire: fused local step ------------------------------------
-    tacc_fn = jax.jit(lambda g, ee: (gamma * g + ee, g, ee))
+    tacc_fn = jax.jit(lambda g, ee: (ref.mul_add(gamma, g, ee), g, ee))
     tpack_fn = jax.jit(lambda a, g, ee: ref.topk_pack_ref(a, K, BLOCK)
                        + (a, ee))
     tunpack_fn = jax.jit(lambda i, v, s, a, ee:
@@ -93,9 +148,17 @@ def run(n: int = N_DEFAULT, iters: int = 20):
     tenew_fn = jax.jit(lambda c, i, v, s, a, ee:
                        (i, v, s, c, jnp.where(mask_self > 0, a - c, ee)))
     tunfused = _pipeline(tacc_fn, tpack_fn, tunpack_fn, tenew_fn)
+    t_use = ops.resolve_use_pallas(use_req, n, _TOPK_R_BLK * BLOCK)
     tfused = jax.jit(lambda g, ee: ops.ef_topk_fused(g, ee, gamma, mask_self,
-                                                     K, BLOCK))
-    pair("ef_topk_local_step",
+                                                     K, BLOCK,
+                                                     use_pallas=t_use))
+    ui, uv, usc, uc, ue = tunfused(x, e)
+    fi, fv, fsc, fc, fe = tfused(x, e)
+    _check("ef_topk_local_step", "index sets", _same_index_sets(ui, fi))
+    _check("ef_topk_local_step", "scales", _close(usc, fsc))
+    _check("ef_topk_local_step", "c", _close(uc, fc))
+    _check("ef_topk_local_step", "e_new", _close(ue, fe))
+    pair("ef_topk_local_step", _ran(t_use),
          _time(tunfused, x, e, iters=iters), _time(tfused, x, e, iters=iters))
 
     # ---- decode + masked reduce (server side, N senders) ------------------
@@ -108,9 +171,12 @@ def run(n: int = N_DEFAULT, iters: int = 20):
         jax.jit(lambda ws, ss: (jax.vmap(
             lambda a, b: ref.sign_unpack_ref(a, b, GROUP))(ws, ss),)),
         jax.jit(lambda dec: (mask[:, None] * dec).sum(0)))
-    dec_fus = jax.jit(lambda ws, ss: ops.sign_decode_reduce(ws, ss, mask,
-                                                            GROUP))
-    pair("sign_decode_reduce",
+    sd_use = ops.resolve_use_pallas(use_req, nc, _SIGN_G_BLK * GROUP)
+    dec_fus = jax.jit(lambda ws, ss: ops.sign_decode_reduce(
+        ws, ss, mask, GROUP, use_pallas=sd_use))
+    _check("sign_decode_reduce", "reduced vector",
+           _close(dec_unf(words, scales)[0], dec_fus(words, scales)))
+    pair("sign_decode_reduce", _ran(sd_use),
          _time(dec_unf, words, scales, iters=iters),
          _time(dec_fus, words, scales, iters=iters))
 
@@ -122,13 +188,25 @@ def run(n: int = N_DEFAULT, iters: int = 20):
         jax.jit(lambda a, b, c: (jax.vmap(
             lambda i, v, sc: ref.topk_unpack_ref(i, v, sc, BLOCK))(a, b, c),)),
         jax.jit(lambda dec: (mask[:, None] * dec).sum(0)))
-    tdec_fus = jax.jit(lambda a, b, c: ops.topk_decode_reduce(a, b, c, mask,
-                                                              BLOCK))
-    pair("topk_decode_reduce",
+    td_use = ops.resolve_use_pallas(use_req, nc, _TOPK_R_BLK * BLOCK)
+    tdec_fus = jax.jit(lambda a, b, c: ops.topk_decode_reduce(
+        a, b, c, mask, BLOCK, use_pallas=td_use))
+    _check("topk_decode_reduce", "reduced vector",
+           _close(tdec_unf(tis, tvs, tss)[0], tdec_fus(tis, tvs, tss)))
+    pair("topk_decode_reduce", _ran(td_use),
          _time(tdec_unf, tis, tvs, tss, iters=iters),
          _time(tdec_fus, tis, tvs, tss, iters=iters))
 
     return rows
+
+
+def _parse_floor(s: str):
+    try:
+        name, floor = s.split("=", 1)
+        return name, float(floor)
+    except ValueError:
+        raise argparse.ArgumentTypeError(
+            f"expected name=floor (e.g. ef_topk_local_step=2.0), got {s!r}")
 
 
 def main():
@@ -136,23 +214,48 @@ def main():
     ap.add_argument("--n", type=int, default=N_DEFAULT,
                     help="flat vector length (default 4M)")
     ap.add_argument("--iters", type=int, default=20)
+    ap.add_argument("--backend", default="auto", choices=ops.BACKENDS,
+                    help="kernel dispatch: auto = Pallas on TPU, jnp "
+                         "elsewhere; rows record what actually ran")
     ap.add_argument("--json", default="BENCH_kernels.json",
                     help="artifact path ('' to skip)")
+    ap.add_argument("--min-speedup", action="append", type=_parse_floor,
+                    default=[], metavar="NAME=FLOOR",
+                    help="fail (exit 1) if the named row's fused/unfused "
+                         "speedup is below FLOOR; repeatable")
     args = ap.parse_args()
 
-    rows = run(n=args.n, iters=args.iters)
-    print(f"{'op':24s} {'jnp_unfused_us':>14s} {'fused_us':>10s} "
-          f"{'speedup':>8s}")
+    rows = run(n=args.n, iters=args.iters, backend=args.backend)
+    print(f"{'op':24s} {'ran':>16s} {'jnp_unfused_us':>14s} "
+          f"{'fused_us':>10s} {'speedup':>8s}")
     for r in rows:
-        print(f"{r['name']:24s} {r['jnp_unfused_us']:14.1f} "
+        print(f"{r['name']:24s} {r['backend_ran']:>16s} "
+              f"{r['jnp_unfused_us']:14.1f} "
               f"{r['fused_us']:10.1f} {r['speedup']:7.2f}x")
     if args.json:
         artifact = {"n": args.n, "iters": args.iters,
                     "jax": jax.__version__,
+                    "backend_requested": args.backend,
                     "backend": jax.default_backend(), "rows": rows}
         with open(args.json, "w") as f:
             json.dump(artifact, f, indent=2)
         print(f"wrote {args.json}")
+
+    floors = dict(args.min_speedup)
+    by_name = {r["name"]: r for r in rows}
+    failed = False
+    for name, floor in floors.items():
+        row = by_name.get(name)
+        if row is None:
+            print(f"--min-speedup: no row named {name!r} "
+                  f"(have {sorted(by_name)})", file=sys.stderr)
+            failed = True
+        elif row["speedup"] < floor:
+            print(f"REGRESSION: {name} speedup {row['speedup']:.2f}x is "
+                  f"below the floor {floor:.2f}x", file=sys.stderr)
+            failed = True
+    if failed:
+        raise SystemExit(1)
 
 
 if __name__ == "__main__":

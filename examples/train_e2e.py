@@ -20,8 +20,7 @@ import jax.numpy as jnp
 from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
 from repro.configs import REGISTRY
 from repro.configs.common import ShapeCfg
-from repro.launch.train import TrainRun, build_train_setup, \
-    make_batch_for_step
+from repro.launch.train import TrainRun, batch_stream, build_train_setup
 
 
 def main():
@@ -33,6 +32,17 @@ def main():
                     help="phase-1 wire compressor (WireFormat selection)")
     ap.add_argument("--num-buckets", type=int, default=1,
                     help="flat-vector buckets for comm overlap")
+    ap.add_argument("--bucket-schedule", default="pipelined",
+                    choices=["pipelined", "serial"],
+                    help="per-bucket collective issue order: pipelined "
+                         "double-buffers so bucket i's wire transfer "
+                         "overlaps bucket i+1's compression (bit-for-bit "
+                         "equal to serial)")
+    ap.add_argument("--prefetch", type=int, default=0,
+                    help="host->device batches staged ahead of the step "
+                         "by a background thread (0 = synchronous; opt-in "
+                         "on CPU fake devices, can race the in-process "
+                         "collective rendezvous)")
     ap.add_argument("--backend", default="auto",
                     choices=["auto", "pallas", "jnp"],
                     help="fused-kernel dispatch for the wire hot path "
@@ -115,6 +125,8 @@ def main():
         run = TrainRun(base_lr=5e-3, mode="cocoef",
                        compressor=args.compressor,
                        num_buckets=args.num_buckets,
+                       bucket_schedule=args.bucket_schedule,
+                       prefetch=args.prefetch,
                        backend=args.backend,
                        straggler=args.straggler,
                        straggler_burst=args.straggler_burst,
@@ -143,16 +155,23 @@ def main():
         print(f"resumed from step {start}")
 
     jstep = jax.jit(setup.train_step)
-    for t in range(start, args.steps):
-        batch = make_batch_for_step(setup, spec, shape, key, t, smoke=True)
-        batch = jax.device_put(batch, setup.batch_shardings)
-        params, e, opt, m = jstep(params, e, opt, batch, jnp.int32(t), key)
-        if t % 10 == 0 or t == args.steps - 1:
-            print(f"step {t:4d} loss={float(m['loss']):.4f}")
-        if (t + 1) % args.ckpt_every == 0:
-            p = save_checkpoint(args.ckpt_dir, t + 1,
-                                {"params": params, "e": e})
-            print(f"  checkpointed -> {p.name}")
+    # batches arrive device-resident, staged --prefetch steps ahead by the
+    # background prefetcher while the mesh runs the current step
+    batches = batch_stream(setup, spec, shape, key, start_step=start,
+                           smoke=True, prefetch=run.prefetch)
+    try:
+        for t in range(start, args.steps):
+            batch = next(batches)
+            params, e, opt, m = jstep(params, e, opt, batch,
+                                      jnp.int32(t), key)
+            if t % 10 == 0 or t == args.steps - 1:
+                print(f"step {t:4d} loss={float(m['loss']):.4f}")
+            if (t + 1) % args.ckpt_every == 0:
+                p = save_checkpoint(args.ckpt_dir, t + 1,
+                                    {"params": params, "e": e})
+                print(f"  checkpointed -> {p.name}")
+    finally:
+        batches.close()     # stop + join the prefetch worker before exit
 
 
 if __name__ == "__main__":

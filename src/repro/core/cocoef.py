@@ -37,8 +37,8 @@ from repro.compat import axis_size
 from repro.kernels import ref as kernel_ref
 from repro.kernels.ops import backend_use_pallas
 from .collectives import (CodingCollectiveConfig, DenseWire, SignWire,
-                          SparseWire, WireFormat, dense_allreduce,
-                          two_phase_coded_allreduce)
+                          SparseWire, WireFormat, coded_allreduce_start,
+                          dense_allreduce, two_phase_coded_allreduce)
 
 __all__ = ["CocoEFConfig", "FlatMeta", "flatten_local", "unflatten_local",
            "padded_size", "cocoef_update", "coding_rank_index"]
@@ -66,7 +66,20 @@ class CocoEFConfig:
     phase2_dtype: str = "float32"     # f32 = paper-faithful broadcast
     phase2_sign: bool = False         # beyond-paper compressed broadcast
     num_buckets: int = 1              # split flat vector for comm overlap
+    bucket_schedule: str = "pipelined"  # pipelined | serial (see below)
+    # ^ "pipelined" double-buffers the per-bucket collectives: bucket i's
+    #   all_to_all is issued, then bucket i+1's fused local step is traced
+    #   BEFORE bucket i's decode/phase 2, so XLA's async collectives can
+    #   overlap the wire transfer with compute.  Bit-for-bit identical to
+    #   "serial" (same ops, reordered issue); "serial" kept as the
+    #   schedule-parity reference.  With num_buckets=1 they coincide.
     backend: str = "auto"             # auto | pallas | jnp kernel dispatch
+
+    def __post_init__(self):
+        if self.bucket_schedule not in ("serial", "pipelined"):
+            raise ValueError(f"unknown bucket_schedule "
+                             f"{self.bucket_schedule!r}; have "
+                             f"('serial', 'pipelined')")
 
     def collective(self) -> CodingCollectiveConfig:
         return CodingCollectiveConfig(
@@ -178,6 +191,45 @@ def _joined(parts: List[jnp.ndarray]) -> jnp.ndarray:
     return parts[0] if len(parts) == 1 else jnp.concatenate(parts)
 
 
+class _BucketSchedule:
+    """Per-bucket collective issue order (CocoEFConfig.bucket_schedule).
+
+    serial:     submit(b) = start + finish immediately — bucket b's decode
+                and phase 2 are traced before bucket b+1 does anything.
+    pipelined:  submit(b) issues bucket b's all_to_all and holds the
+                in-flight handle; the PREVIOUS bucket is finished only
+                after the next one's local step + all_to_all have been
+                traced (window-2 double buffer), so the compiler can hide
+                bucket b's wire transfer behind bucket b+1's compute.
+
+    Both produce identical values — the same ops run, only the issue
+    order differs — which test_backend_parity pins down bitwise."""
+
+    def __init__(self, schedule: str, coll: CodingCollectiveConfig,
+                 mask: jnp.ndarray):
+        self.pipelined = schedule == "pipelined"
+        self.coll = coll
+        self.mask = mask
+        self._pending = None
+        self._parts: List[jnp.ndarray] = []
+
+    def submit(self, wire: WireFormat, payload) -> None:
+        if not self.pipelined:
+            self._parts.append(two_phase_coded_allreduce(
+                None, wire, self.coll, self.mask, payload=payload))
+            return
+        nxt = coded_allreduce_start(wire, self.coll, self.mask, payload)
+        if self._pending is not None:
+            self._parts.append(self._pending.finish())
+        self._pending = nxt
+
+    def collect(self) -> List[jnp.ndarray]:
+        if self._pending is not None:
+            self._parts.append(self._pending.finish())
+            self._pending = None
+        return self._parts
+
+
 def cocoef_update(g_local: jnp.ndarray, e_local: jnp.ndarray,
                   mask: Optional[jnp.ndarray], gamma, cfg: CocoEFConfig,
                   *, mask_provider: Optional[Callable] = None,
@@ -221,18 +273,21 @@ def cocoef_update(g_local: jnp.ndarray, e_local: jnp.ndarray,
     if cfg.mode == "coco":
         # no error feedback: pack-and-send only — C(acc) is never needed
         # locally, so neither c nor the dead bucket concat is materialized
-        ghat_parts = []
+        sched = _BucketSchedule(cfg.bucket_schedule, coll, mask)
         for acc_b in _bucketed(gamma * g_local, cfg.num_buckets):
             wire = cfg.wire_format(acc_b.shape[0], nd)
             _check_rank_budgets(wire, mask)
             payload = wire.apply_rank_budget(
                 wire.fused_pack(acc_b, use_pallas=use_pallas), my_idx)
-            ghat_parts.append(two_phase_coded_allreduce(
-                None, wire, coll, mask, payload=payload))
-        return _joined(ghat_parts), e_local
+            sched.submit(wire, payload)
+        return _joined(sched.collect()), e_local
 
-    # cocoef: fused accumulate + compress + error update per bucket
-    ghat_parts, e_parts = [], []
+    # cocoef: fused accumulate + compress + error update per bucket.
+    # Under the pipelined schedule bucket b's local step is traced before
+    # bucket b-1's decode/phase 2 (the _BucketSchedule window), so the
+    # wire transfer of one bucket hides behind the compression of the next.
+    sched = _BucketSchedule(cfg.bucket_schedule, coll, mask)
+    e_parts = []
     for g_b, e_b in zip(_bucketed(g_local, cfg.num_buckets),
                         _bucketed(e_local, cfg.num_buckets)):
         wire = cfg.wire_format(g_b.shape[0], nd)
@@ -251,9 +306,8 @@ def cocoef_update(g_local: jnp.ndarray, e_local: jnp.ndarray,
         else:
             payload, _, e_new_b = wire.fused_local_step(
                 g_b, e_b, gamma, my_mask, use_pallas=use_pallas, want_c=False)
-        ghat_parts.append(two_phase_coded_allreduce(
-            None, wire, coll, mask, payload=payload))
+        sched.submit(wire, payload)
         e_parts.append(e_new_b)
-    ghat = _joined(ghat_parts)
+    ghat = _joined(sched.collect())
     new_e = _joined(e_parts)
     return ghat, new_e.astype(jnp.dtype(cfg.ef_dtype))

@@ -95,6 +95,8 @@ __all__ = [
     "get_wire",
     "wire_for_compressor",
     "CodingCollectiveConfig",
+    "InFlightAggregate",
+    "coded_allreduce_start",
     "two_phase_coded_allreduce",
     "two_phase_sign_allreduce",
     "dense_allreduce",
@@ -425,26 +427,20 @@ class SparseWire(WireFormat):
                          want_c=True):
         use = kernel_ops.resolve_use_pallas(use_pallas, g.shape[0],
                                             self._tile())
-        idx, val, scale, c, e_new = kernel_ops.ef_topk_fused(
+        # The kernels quantize in-register (normalize -> value_dtype ->
+        # denormalize), so their c IS the transmitted reconstruction the
+        # receivers decode (`values * scale` after value-dtype rounding)
+        # and e_new already tracks acc - C(acc) with C == unpack∘pack —
+        # which the reference-vs-mesh parity gate demands of the error
+        # vector.  No unpack-of-pack scatter here, and want_c=False lets
+        # the kernel skip the full-vector c store again.
+        idx, val, scale, c_q, e_new = kernel_ops.ef_topk_fused(
             g, e, gamma, mask_self, self.k_max, self.block_size,
-            want_c=True, use_pallas=use)
-        val = val.astype(jnp.dtype(self.value_dtype))
-        payload = (idx.astype(self.index_dtype), val, scale)
-        # The kernel's c holds the exact kept values, but the receivers
-        # decode `values * scale` after the value-dtype rounding — and for
-        # f32 even the scale normalization round trip (v/s)*s is 1-2 ulp
-        # away.  The error vector must track the TRANSMITTED reconstruction
-        # (e_new = acc - C(acc) with C == unpack∘pack), or the production
-        # Algorithm 1 drifts from the reference EF loop step by step
-        # (caught by the reference-vs-mesh parity gate).  c + e_new == acc
-        # wherever mask_self participates, so no extra pass over acc —
-        # but the kernel must now always store c (want_c=False DCE given
-        # up) plus one unpack scatter; folding the value quantization into
-        # the kernels would win it back.
-        c_q = self.unpack(payload)
-        e_new = jnp.where(mask_self > 0, c + e_new - c_q,
-                          e.astype(jnp.float32))
-        return payload, (c_q if want_c else None), e_new
+            want_c=want_c, value_dtype=self.value_dtype, use_pallas=use)
+        # val carries value_dtype-rounded numbers in f32: the cast is exact
+        payload = (idx.astype(self.index_dtype),
+                   val.astype(jnp.dtype(self.value_dtype)), scale)
+        return payload, c_q, e_new
 
     def decode_reduce(self, payloads, sender_mask, use_pallas=None):
         idx, val, scales = payloads
@@ -567,6 +563,79 @@ def _chunk_count(axis: str) -> int:
     return axis_size(axis)
 
 
+@dataclasses.dataclass
+class InFlightAggregate:
+    """Phase-1 state of a coded allreduce whose all_to_all has been issued
+    but whose decode / phase 2 has not.
+
+    The double-buffered bucket schedule (`repro.core.cocoef` with
+    `bucket_schedule="pipelined"`) traces bucket i+1's fused local step
+    between `coded_allreduce_start(bucket_i)` and this handle's `finish()`,
+    giving XLA's async collectives / latency-hiding scheduler a window to
+    overlap bucket i's wire transfer with bucket i+1's compute.  The values
+    are untouched — finishing later is bit-for-bit the serial schedule."""
+
+    recv: Tuple[jnp.ndarray, ...]
+    sender_mask: jnp.ndarray
+    wire: WireFormat
+    cfg: CodingCollectiveConfig
+
+    def finish(self) -> jnp.ndarray:
+        """Decode + mask + reduce the received chunks, run phase 2; returns
+        the (n,) aggregate, identical on every coding rank."""
+        chunk_sum = self.wire.decode_reduce(
+            self.recv, self.sender_mask,
+            use_pallas=kernel_ops.backend_use_pallas(self.cfg.backend))
+        for ax in self.cfg.outer_axes:
+            chunk_sum = lax.psum(chunk_sum, ax)
+        return _phase2_gather(chunk_sum, self.cfg)
+
+
+def coded_allreduce_start(
+    wire: WireFormat,
+    cfg: CodingCollectiveConfig,
+    mask: jnp.ndarray,
+    payload: Tuple[jnp.ndarray, ...],
+) -> InFlightAggregate:
+    """Issue phase 1 of the coded allreduce — chunk the payload and
+    all_to_all it over the chunk axis — and return the in-flight handle
+    whose `finish()` completes decode + phase 2."""
+    n = wire.payload_n(payload)
+    nd = _chunk_count(cfg.chunk_axis)
+    wire.check(n, nd)
+
+    # ---- phase 1: all_to_all compressed chunks over the chunk axis -------
+    # generic chunking: every payload leaf's leading dim is proportional to n
+    chunked = tuple(p.reshape((nd, p.shape[0] // nd) + p.shape[1:])
+                    for p in payload)
+    # row i of the result = sender i's chunk destined for this rank
+    recv = tuple(lax.all_to_all(p, cfg.chunk_axis, split_axis=0,
+                                concat_axis=0, tiled=False) for p in chunked)
+
+    # sender identity: (outer..., chunk-rank i); this rank's outer coords
+    outer_idx = 0
+    for ax in cfg.outer_axes:
+        outer_idx = outer_idx * axis_size(ax) + lax.axis_index(ax)
+    sender_base = outer_idx * nd
+    sender_mask = lax.dynamic_slice_in_dim(mask, sender_base, nd)  # (nd,)
+    return InFlightAggregate(recv, sender_mask, wire, cfg)
+
+
+def _phase2_gather(chunk_sum: jnp.ndarray,
+                   cfg: CodingCollectiveConfig) -> jnp.ndarray:
+    """Phase 2: broadcast the aggregated chunk back over the chunk axis."""
+    if cfg.phase2_sign:
+        # beyond-paper: re-sign-compress the aggregate (server-side EF is
+        # maintained by the caller via the returned residual if desired)
+        w2, s2 = sign_pack(chunk_sum.astype(jnp.float32), cfg.group_size)
+        w2g = lax.all_gather(w2, cfg.chunk_axis, axis=0, tiled=True)
+        s2g = lax.all_gather(s2, cfg.chunk_axis, axis=0, tiled=True)
+        return sign_unpack(w2g, s2g, cfg.group_size)
+    payload2 = chunk_sum.astype(cfg.phase2_dtype)
+    return lax.all_gather(payload2, cfg.chunk_axis, axis=0,
+                          tiled=True).astype(jnp.float32)
+
+
 def two_phase_coded_allreduce(
     c_local: Optional[jnp.ndarray],
     wire: WireFormat,
@@ -589,52 +658,15 @@ def two_phase_coded_allreduce(
     payload: optional pre-packed wire payload of c_local (hot-path callers
       that already packed to obtain c_local avoid a second pack here).
     Returns: (n,) aggregated ghat, identical on every coding rank.
+
+    This is `coded_allreduce_start(...).finish()` — callers that want to
+    overlap compute with the wire transfer use the split form directly.
     """
     if payload is None:
         if c_local is None:
             raise ValueError("need c_local or a pre-packed payload")
         payload = wire.pack(c_local)
-    n = wire.payload_n(payload) if c_local is None else c_local.shape[0]
-    nd = _chunk_count(cfg.chunk_axis)
-    wire.check(n, nd)
-
-    # ---- phase 1: all_to_all compressed chunks over the chunk axis -------
-    # generic chunking: every payload leaf's leading dim is proportional to n
-    chunked = tuple(p.reshape((nd, p.shape[0] // nd) + p.shape[1:])
-                    for p in payload)
-    # row i of the result = sender i's chunk destined for this rank
-    recv = tuple(lax.all_to_all(p, cfg.chunk_axis, split_axis=0,
-                                concat_axis=0, tiled=False) for p in chunked)
-
-    # sender identity: (outer..., chunk-rank i); this rank's outer coords
-    outer_idx = 0
-    for ax in cfg.outer_axes:
-        outer_idx = outer_idx * axis_size(ax) + lax.axis_index(ax)
-    sender_base = outer_idx * nd
-    sender_mask = lax.dynamic_slice_in_dim(mask, sender_base, nd)  # (nd,)
-
-    # fused decode + straggler-mask + sum over the nd senders    (n/nd,)
-    chunk_sum = wire.decode_reduce(
-        recv, sender_mask,
-        use_pallas=kernel_ops.backend_use_pallas(cfg.backend))
-
-    # ---- hierarchical reduction over outer coding axes (dense, small) ----
-    for ax in cfg.outer_axes:
-        chunk_sum = lax.psum(chunk_sum, ax)
-
-    # ---- phase 2: broadcast the aggregated chunk back ---------------------
-    if cfg.phase2_sign:
-        # beyond-paper: re-sign-compress the aggregate (server-side EF is
-        # maintained by the caller via the returned residual if desired)
-        w2, s2 = sign_pack(chunk_sum.astype(jnp.float32), cfg.group_size)
-        w2g = lax.all_gather(w2, cfg.chunk_axis, axis=0, tiled=True)
-        s2g = lax.all_gather(s2, cfg.chunk_axis, axis=0, tiled=True)
-        ghat = sign_unpack(w2g, s2g, cfg.group_size)
-    else:
-        payload2 = chunk_sum.astype(cfg.phase2_dtype)
-        ghat = lax.all_gather(payload2, cfg.chunk_axis, axis=0,
-                              tiled=True).astype(jnp.float32)
-    return ghat
+    return coded_allreduce_start(wire, cfg, mask, payload).finish()
 
 
 def two_phase_sign_allreduce(

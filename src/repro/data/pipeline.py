@@ -15,6 +15,8 @@ loss decreases during smoke training, with zero I/O.
 from __future__ import annotations
 
 import dataclasses
+import queue
+import threading
 from typing import Iterator, Tuple
 
 import jax
@@ -22,7 +24,8 @@ import jax.numpy as jnp
 import numpy as np
 
 __all__ = ["SyntheticLMConfig", "synthetic_lm_batch", "subset_batch_for_rank",
-           "coded_train_batch", "host_stream"]
+           "coded_train_batch", "coded_batch_stream", "prefetch_to_device",
+           "host_stream"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -97,6 +100,102 @@ def coded_train_batch(key: jax.Array, step, allocation, W, per_subset: int,
         toks.append(t)
         wts.append(w)
     return jnp.stack(toks), jnp.stack(wts)
+
+
+def coded_batch_stream(key: jax.Array, allocation, W, per_subset: int,
+                       seq_len: int, vocab: int, start_step: int = 0
+                       ) -> Iterator[Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Infinite iterator of `coded_train_batch(key, t, ...)` for
+    t = start_step, start_step+1, ... — the generator half of the
+    prefetched train loop (`prefetch_to_device`).  Deterministic in
+    (key, step), so prefetching cannot change what any step trains on."""
+    step = start_step
+    while True:
+        yield coded_train_batch(key, step, allocation, W, per_subset,
+                                seq_len, vocab)
+        step += 1
+
+
+def prefetch_to_device(it: Iterator, size: int = 2,
+                       shardings=None) -> Iterator:
+    """Host -> device prefetcher: a background thread pulls from `it`,
+    `jax.device_put`s each item (against `shardings` when given), and
+    parks up to `size` device-resident items in a bounded queue.
+
+    With size=2 (double buffer) the host is generating + transferring step
+    t+1's coded batch while the mesh executes step t, hiding the
+    host-side batch construction behind device compute — the step-ahead
+    pipeline of ROADMAP open item 3.  Ordering is preserved exactly and
+    items are never dropped, so consuming this iterator is
+    indistinguishable from mapping device_put over `it`.
+
+    The worker thread is a daemon and also honors a stop event set when
+    the consumer abandons the iterator (generator close/GC), so partial
+    consumption cannot leak a blocked thread; closing the iterator also
+    JOINS the worker (a daemon still inside jax.device_put at interpreter
+    exit aborts from XLA's C++ teardown).  Exceptions raised by `it` or
+    by the transfer re-raise at the consumer's next pull.
+
+    CAVEAT (XLA:CPU fake devices): the worker issues jax client calls
+    (device_put, and any jax ops inside `it`) concurrently with whatever
+    the consumer thread executes.  On the CPU backend's in-process
+    collectives this can race the all-participant rendezvous of a mesh
+    step and stall it (observed as `collective_ops_utils` "may be stuck"
+    spam), so the train loop keeps prefetch OPT-IN (TrainRun.prefetch=0)
+    until an accelerator backend lands; single-device streams (no
+    collectives) are unaffected."""
+    if size < 1:
+        raise ValueError("prefetch size must be >= 1")
+    q: "queue.Queue" = queue.Queue(maxsize=size)
+    stop = threading.Event()
+    sentinel = object()
+    err: list = []
+
+    def worker():
+        try:
+            for item in it:
+                item = (jax.device_put(item, shardings)
+                        if shardings is not None else jax.device_put(item))
+                while not stop.is_set():
+                    try:
+                        q.put(item, timeout=0.1)
+                        break
+                    except queue.Full:
+                        continue
+                if stop.is_set():
+                    return
+        except BaseException as exc:   # re-raised on the consumer side
+            err.append(exc)
+        finally:
+            while not stop.is_set():
+                try:
+                    q.put(sentinel, timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+
+    th = threading.Thread(target=worker, daemon=True,
+                          name="repro-prefetch")
+    th.start()
+    try:
+        while True:
+            item = q.get()
+            if item is sentinel:
+                if err:
+                    raise err[0]
+                return
+            yield item
+    finally:
+        stop.set()
+        # unblock a worker stuck on q.put, then wait for it to wind down:
+        # a daemon thread still inside jax.device_put at interpreter exit
+        # aborts the process from XLA's C++ teardown
+        while True:
+            try:
+                q.get_nowait()
+            except queue.Empty:
+                break
+        th.join(timeout=5.0)
 
 
 def host_stream(cfg: SyntheticLMConfig, start_step: int = 0

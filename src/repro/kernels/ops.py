@@ -2,13 +2,18 @@
 
 On TPU the Pallas path lowers to Mosaic; on CPU (this container) it runs in
 interpret mode.  `use_pallas=False` (the default inside the dry-run
-lowering) uses the pure-jnp reference — identical math, so roofline terms
-are unaffected."""
+lowering) uses the jnp path — identical math, so roofline terms are
+unaffected.  The jnp hot paths for the sparse wire live in topk_fast.py
+(barrier-fixed `lax.top_k`); kernels/ref.py stays the barrier-free oracle
+that everything is tested against."""
 from __future__ import annotations
+
+import warnings
 
 import jax
 
-from . import ref, sign_pack as sp, topk_block as tb, topk_pack as tp
+from . import (ref, sign_pack as sp, topk_block as tb, topk_fast as tf,
+               topk_pack as tp)
 
 
 def default_use_pallas() -> bool:
@@ -34,13 +39,31 @@ def backend_use_pallas(backend: str):
     raise ValueError(f"unknown backend {backend!r}; have {BACKENDS}")
 
 
+_fallback_warned = set()
+
+
 def resolve_use_pallas(use_pallas, n: int, tile_elems: int) -> bool:
     """Concrete kernel choice for a flat length `n`: the tristate
     `use_pallas` (None = Pallas iff on TPU) guarded by the kernel's row
     tile — shapes not divisible by `tile_elems` (G_BLK/R_BLK rows worth of
-    elements) fall back to the jnp reference, which has no tile."""
+    elements) fall back to the jnp path, which has no tile.
+
+    When Pallas was EXPLICITLY requested (`use_pallas=True`, i.e.
+    backend="pallas") and the tile guard rejects the shape, warn once per
+    (n, tile) — a silent fallback here used to make "pallas" benchmark
+    numbers quietly measure the jnp path."""
     use = default_use_pallas() if use_pallas is None else use_pallas
-    return bool(use) and n % tile_elems == 0
+    fits = n % tile_elems == 0
+    if use_pallas is True and not fits:
+        key = (n, tile_elems)
+        if key not in _fallback_warned:
+            _fallback_warned.add(key)
+            warnings.warn(
+                f"backend='pallas' requested but n={n} is not a multiple of "
+                f"the kernel tile ({tile_elems} elements); falling back to "
+                f"the jnp path for this shape (warned once per shape)",
+                RuntimeWarning, stacklevel=3)
+    return bool(use) and fits
 
 
 def sign_pack(x, group_size: int, use_pallas=None):
@@ -75,15 +98,15 @@ def sign_decode_reduce(words, scales, mask, group_size: int, use_pallas=None):
 
 
 def ef_topk_fused(g, e, gamma, mask_self, k: int, block_size: int,
-                  want_c: bool = True, use_pallas=None):
+                  want_c: bool = True, value_dtype: str = "float32",
+                  use_pallas=None):
     use = default_use_pallas() if use_pallas is None else use_pallas
     if use:
         return tp.ef_topk_fused(g, e, gamma, mask_self, k, block_size,
-                                want_c=want_c,
+                                want_c=want_c, value_dtype=value_dtype,
                                 interpret=jax.default_backend() != "tpu")
-    i, v, s, c, e_new = ref.ef_topk_fused_ref(g, e, gamma, mask_self, k,
-                                              block_size)
-    return i, v, s, (c if want_c else None), e_new
+    return tf.ef_topk_fused_fast(g, e, gamma, mask_self, k, block_size,
+                                 value_dtype=value_dtype, want_c=want_c)
 
 
 def dense_decode_reduce(values, mask, use_pallas=None):
@@ -106,7 +129,7 @@ def topk_pack(x, k: int, block_size: int, use_pallas=None):
     if use:
         return tp.topk_pack(x, k, block_size,
                             interpret=jax.default_backend() != "tpu")
-    return ref.topk_pack_ref(x, k, block_size)
+    return tf.topk_pack_fast(x, k, block_size)
 
 
 def topk_unpack(indices, values, scales, block_size: int):

@@ -108,29 +108,36 @@ def topk_pack_ref(x: jnp.ndarray, k: int, block_size: int
 
 
 def ef_topk_fused_ref(g: jnp.ndarray, e: jnp.ndarray, gamma, mask_self,
-                      k: int, block_size: int):
+                      k: int, block_size: int,
+                      value_dtype: str = "float32"):
     """Fused Algorithm-1 local step on the sparse (block top-K) wire:
       acc = gamma * g + e
-      (indices, values, scales) = topk_pack(acc)
-      c = scatter of the kept SIGNED values (exact, pre-normalization —
-          bit-identical to the Pallas kernel; the receivers' decode
-          reapplies values * scale, 1-2 ulp away)
+      (indices, values, scales) = topk_pack(acc), values rounded to
+          value_dtype (the wire's payload precision), carried in f32
+      c = scatter of values * scale — the TRANSMITTED reconstruction,
+          i.e. exactly what `topk_unpack_ref` gives a receiver, so the
+          error update tracks the wire and no unpack-of-pack is needed
       e_new = mask_self ? acc - c : e
-    Returns (indices, values, scales, c, e_new)."""
+    Returns (indices, values, scales, c, e_new).  `c + e_new == acc` stays
+    bit-exact at kept coordinates: c is within a factor of two of acc
+    there (value_dtype relative error << 1/2), so Sterbenz's lemma makes
+    the subtraction exact and the sum rounds back to acc."""
     accb = mul_add(gamma, g, e).reshape(-1, block_size)
     mag = jnp.abs(accb)
     topv, idx = jax.lax.top_k(mag, k)
     sv = jnp.take_along_axis(accb, idx, axis=-1)
     scale = topv[:, 0]
     safe = jnp.where(scale == 0, 1.0, scale)
+    val = (sv / safe[:, None]).astype(jnp.dtype(value_dtype)).astype(
+        jnp.float32)
     nb = accb.shape[0]
     base = jnp.arange(nb, dtype=jnp.int32)[:, None] * block_size
     flat_idx = (base + idx).reshape(-1)
     c = jnp.zeros((nb * block_size,), jnp.float32
-                  ).at[flat_idx].set(sv.reshape(-1))
+                  ).at[flat_idx].set((val * safe[:, None]).reshape(-1))
     acc = accb.reshape(-1)
     e_new = jnp.where(mask_self > 0, acc - c, e.astype(jnp.float32))
-    return idx.astype(jnp.int32), sv / safe[:, None], safe, c, e_new
+    return idx.astype(jnp.int32), val, safe, c, e_new
 
 
 def dense_decode_reduce_ref(values: jnp.ndarray, mask: jnp.ndarray

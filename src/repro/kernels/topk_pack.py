@@ -3,10 +3,12 @@
 Mirrors kernels/sign_pack.py for the SparseWire of
 `repro.core.collectives`: per contiguous block of `block_size` coords the
 wire carries the k largest-|.| entries as (in-block indices, values
-normalized by the per-block scale, the f32 scale).  Selection runs k rounds
-of (row-max |x| over unselected, mark argmax) — pure VPU work, no sort, k is
-small (4-32); tie-breaking matches kernels/ref.topk_pack_ref (lax.top_k:
-first occurrence wins).
+normalized by the per-block scale, the f32 scale).  Selection is
+`topk_block.block_select` — a sort-free per-row threshold search on the
+|x| bit patterns (31 monotone halving steps seeded by the block max) plus
+one compaction pass, replacing the old k-round argmax whose vector
+reductions grew linearly in k; tie-breaking matches
+kernels/ref.topk_pack_ref (lax.top_k: first occurrence wins).
 
 Tiling: the flat vector is processed as (rows of R_BLK blocks) x
 (block_size lanes); block_size is a multiple of 128 in production so every
@@ -33,36 +35,14 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.topk_block import block_select
+
 R_BLK = 8  # blocks (rows) per grid step
-
-
-def _select_topk(x, k: int):
-    """x: (R, B) f32 -> (idx (R, k) i32, sval (R, k) f32, scale (R, 1) f32).
-
-    Indices in decreasing-magnitude order, first occurrence wins ties."""
-    B = x.shape[-1]
-    mag = jnp.abs(x)
-    pos = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
-    scale = jnp.max(mag, axis=-1, keepdims=True)               # (R, 1)
-    avail = jnp.ones(x.shape, jnp.bool_)
-    idx_cols, val_cols = [], []
-    for _ in range(k):                                         # static rounds
-        m = jnp.where(avail, mag, -1.0)
-        row_max = jnp.max(m, axis=-1, keepdims=True)
-        is_max = (m == row_max) & avail
-        first = jnp.min(jnp.where(is_max, pos, B), axis=-1, keepdims=True)
-        sel = pos == first
-        idx_cols.append(first.astype(jnp.int32))               # (R, 1)
-        val_cols.append(jnp.sum(jnp.where(sel, x, 0.0), axis=-1,
-                                keepdims=True))                # (R, 1)
-        avail = avail & ~sel
-    return (jnp.concatenate(idx_cols, axis=-1),
-            jnp.concatenate(val_cols, axis=-1), scale)
 
 
 def _topk_pack_kernel(x_ref, idx_ref, val_ref, scale_ref, *, k: int):
     x = x_ref[...].astype(jnp.float32)
-    idx, sval, scale = _select_topk(x, k)
+    idx, sval, scale = block_select(x, k)
     safe = jnp.where(scale == 0, 1.0, scale)
     idx_ref[...] = idx
     val_ref[...] = sval / safe
@@ -111,16 +91,20 @@ def _scatter_rows(idx, sval, shape):
 
 def _ef_topk_fused_kernel(g_ref, e_ref, gamma_ref, mask_ref,
                           idx_ref, val_ref, scale_ref, *out_refs,
-                          k: int, want_c: bool):
+                          k: int, want_c: bool, value_dtype: str):
     gamma = gamma_ref[0]
     mask = mask_ref[0]
     e = e_ref[...].astype(jnp.float32)
     acc = gamma * g_ref[...].astype(jnp.float32) + e                # (R, B)
-    idx, sval, scale = _select_topk(acc, k)
+    idx, sval, scale = block_select(acc, k)
     safe = jnp.where(scale == 0, 1.0, scale)
-    c = _scatter_rows(idx, sval, acc.shape)   # exact kept values, c+e' = acc
+    # normalize -> wire precision -> denormalize IN-REGISTER: c is the
+    # transmitted reconstruction (== topk_unpack of the payload), so the
+    # error update tracks the wire without an unpack-of-pack round trip
+    val = (sval / safe).astype(jnp.dtype(value_dtype)).astype(jnp.float32)
+    c = _scatter_rows(idx, val * safe, acc.shape)
     idx_ref[...] = idx
-    val_ref[...] = sval / safe
+    val_ref[...] = val
     scale_ref[...] = safe
     if want_c:
         out_refs[0][...] = c
@@ -128,13 +112,15 @@ def _ef_topk_fused_kernel(g_ref, e_ref, gamma_ref, mask_ref,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("k", "block_size", "want_c", "interpret"))
+                   static_argnames=("k", "block_size", "want_c",
+                                    "value_dtype", "interpret"))
 def ef_topk_fused(g: jnp.ndarray, e: jnp.ndarray, gamma, mask_self,
                   k: int, block_size: int, want_c: bool = True,
-                  interpret: bool = True):
+                  value_dtype: str = "float32", interpret: bool = True):
     """Fused local COCO-EF step on the sparse wire: one HBM pass over g/e
-    producing the wire payload (indices, values, scales), the decompressed
-    C(acc) and the new error.  g, e: (n,) f32; gamma, mask_self: scalars.
+    producing the wire payload (indices, values rounded to value_dtype,
+    scales), the transmitted reconstruction C(acc) and the new error.
+    g, e: (n,) f32; gamma, mask_self: scalars.
     Semantics match kernels.ref.ef_topk_fused_ref bit-for-bit.
     want_c=False skips the full-vector c store (the train path only ships
     the payload; a custom call's outputs are not DCE-able)."""
@@ -149,7 +135,8 @@ def ef_topk_fused(g: jnp.ndarray, e: jnp.ndarray, gamma, mask_self,
     full = [pl.BlockSpec((R_BLK, block_size), lambda i: (i, 0)),
             jax.ShapeDtypeStruct((rows, block_size), jnp.float32)]
     outs = pl.pallas_call(
-        functools.partial(_ef_topk_fused_kernel, k=k, want_c=want_c),
+        functools.partial(_ef_topk_fused_kernel, k=k, want_c=want_c,
+                          value_dtype=value_dtype),
         grid=grid,
         in_specs=[
             pl.BlockSpec((R_BLK, block_size), lambda i: (i, 0)),

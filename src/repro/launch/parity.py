@@ -57,7 +57,8 @@ def _records(theta: jnp.ndarray, e: np.ndarray) -> Dict[str, np.ndarray]:
 def run_parity(compressor: str = "sign", T: int = 20, N: int = 4,
                shards: int = 2, dim: int = 1024, gamma: float = 2e-6,
                p: float = 0.25, d: int = 2, seed: int = 0,
-               backend: str = "jnp") -> Dict:
+               backend: str = "jnp", num_buckets: int = 1,
+               bucket_schedule: str = "pipelined") -> Dict:
     """Train the reference EF loop and the mesh `cocoef_update` step on the
     same linreg task / masks / wire for `T` steps and compare trajectories.
 
@@ -72,7 +73,9 @@ def run_parity(compressor: str = "sign", T: int = 20, N: int = 4,
     n_loc = dim // shards
     ccfg = CocoEFConfig(coding_axes=("data",), group_size=_GROUP,
                         compressor=compressor, block_size=_BLOCK,
-                        k_per_block=_K, backend=backend)
+                        k_per_block=_K, backend=backend,
+                        num_buckets=num_buckets,
+                        bucket_schedule=bucket_schedule)
     wire = ccfg.wire_format(n_loc, N)
     wire.check(n_loc, N)               # dim must need no padding: the
     #   reference loop compresses the raw (dim,) vector, so any pad would

@@ -42,7 +42,8 @@ from repro.optim import OptimizerConfig, apply_update, init_opt_state, \
 from repro.sharding import ctx, rules
 from repro.sim import stragglers
 
-__all__ = ["TrainRun", "build_train_setup", "setup_encode_weights"]
+__all__ = ["TrainRun", "build_train_setup", "setup_encode_weights",
+           "batch_stream"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,6 +59,14 @@ class TrainRun:
     phase2_dtype: str = "float32"
     phase2_sign: bool = False
     num_buckets: int = 1
+    bucket_schedule: str = "pipelined"  # pipelined | serial bucket issue
+    #   order (CocoEFConfig.bucket_schedule): pipelined double-buffers the
+    #   per-bucket collectives so bucket i's wire transfer overlaps bucket
+    #   i+1's fused local step; bit-for-bit equal to serial
+    prefetch: int = 0                # host->device batches staged ahead of
+    #   the step (data.pipeline.prefetch_to_device); 0 = synchronous.
+    #   Opt-in: on XLA:CPU the worker thread's concurrent client calls can
+    #   race the fake-device collective rendezvous (see prefetch_to_device)
     backend: str = "auto"            # auto | pallas | jnp kernel dispatch
     straggler: str = "iid"           # iid | markov | hetero | trace
     straggler_burst: float = 8.0     # markov: mean slow-burst length (steps)
@@ -99,6 +108,12 @@ class TrainRun:
                              f"have ('auto', 'pallas', 'jnp')")
         if self.num_buckets < 1:
             raise ValueError(f"num_buckets={self.num_buckets} must be >= 1")
+        if self.bucket_schedule not in ("serial", "pipelined"):
+            raise ValueError(f"unknown bucket_schedule "
+                             f"{self.bucket_schedule!r}; have "
+                             f"('serial', 'pipelined')")
+        if self.prefetch < 0:
+            raise ValueError(f"prefetch={self.prefetch} must be >= 0")
         if self.k_budgets is not None and \
                 any(k < 1 for k in self.k_budgets):
             raise ValueError("every per-rank k budget must be >= 1")
@@ -223,7 +238,7 @@ def build_train_setup(spec: ArchSpec, mesh: Mesh, shape: ShapeCfg,
         block_size=spec.coding.block_size, wire_dtype=spec.coding.wire_dtype,
         ef_dtype=run.ef_dtype, phase2_dtype=run.phase2_dtype,
         phase2_sign=run.phase2_sign, num_buckets=run.num_buckets,
-        backend=run.backend)
+        bucket_schedule=run.bucket_schedule, backend=run.backend)
 
     # device-local flat size (uniform across devices by construction);
     # padding alignment comes from the active wire format, not just the
@@ -432,3 +447,32 @@ def make_batch_for_step(setup: TrainSetup, spec: ArchSpec, shape: ShapeCfg,
                             jnp.bfloat16) * 0.02
     tgt = toks[..., :-1]
     return {"inputs": emb, "targets": tgt, "weights": wts}
+
+
+def batch_stream(setup: TrainSetup, spec: ArchSpec, shape: ShapeCfg, key,
+                 start_step: int = 0, smoke: bool = False, prefetch: int = 0):
+    """Device-resident batch iterator for the serial train loop: yields the
+    `make_batch_for_step` batches in step order, already `device_put`
+    against `setup.batch_shardings`.
+
+    With prefetch >= 1 a background thread stages that many batches ahead
+    (`data.pipeline.prefetch_to_device`), so while the mesh executes step
+    t the host is generating + transferring step t+1's coded batch — the
+    host-side batch construction disappears from the step's critical path.
+    prefetch=0 (the default) is a synchronous generate-then-put per pull
+    (identical batches either way: the maker is deterministic in
+    (key, step)).  Prefetch is OPT-IN here because on XLA:CPU fake
+    devices the worker's concurrent client calls can race the in-process
+    collective rendezvous of the mesh step — see prefetch_to_device."""
+    from repro.data import pipeline
+
+    def gen():
+        t = start_step
+        while True:
+            yield make_batch_for_step(setup, spec, shape, key, t, smoke=smoke)
+            t += 1
+
+    if prefetch < 1:
+        return (jax.device_put(b, setup.batch_shardings) for b in gen())
+    return pipeline.prefetch_to_device(gen(), size=prefetch,
+                                       shardings=setup.batch_shardings)

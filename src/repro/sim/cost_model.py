@@ -152,6 +152,19 @@ class StepTimer:
     n: flat coords per rank on the wire (the padded local gradient size).
     phase2_itemsize: bytes/coord of the aggregated broadcast (4 = the
       paper-faithful f32 server broadcast, 2 = bf16 beyond-paper option).
+    num_buckets: buckets the flat vector is split into (one phase-1 +
+      phase-2 exchange each, so serial mode pays the per-message latency
+      per bucket) — mirrors CocoEFConfig.num_buckets.
+    overlap: model the pipelined bucket schedule
+      (CocoEFConfig.bucket_schedule="pipelined"): with B buckets the step
+      is a 3-stage pipeline pack -> uplink -> downlink over B items, so
+      after filling, the per-bucket BOTTLENECK stage is paid B-1 times
+      instead of the full per-bucket sum.  Requires num_buckets > 1 to
+      change anything.
+    pack_s: per-step local pack/compress seconds fed into the overlap
+      pipeline as its compute stage (measure with benchmarks/
+      kernel_bench.py: the fused ef_*_local_step time); 0.0 keeps the
+      packing inside `compute` exactly as before.
     """
 
     wire: WireFormat
@@ -159,6 +172,15 @@ class StepTimer:
     link: LinkProfile = DEFAULT_LINK
     compute: ComputeProfile = DEFAULT_COMPUTE
     phase2_itemsize: int = 4
+    num_buckets: int = 1
+    overlap: bool = False
+    pack_s: float = 0.0
+
+    def __post_init__(self):
+        if self.num_buckets < 1:
+            raise ValueError("num_buckets must be >= 1")
+        if self.pack_s < 0:
+            raise ValueError("pack_s must be >= 0")
 
     def bytes_up(self) -> int:
         """Phase-1 payload bytes for one rank — `wire.wire_bytes(n)` (the
@@ -212,13 +234,30 @@ class StepTimer:
                           np.max(np.where(trace > 0, comp[None, :], 0.0),
                                  axis=1),
                           comp.max())
-        t_up = np.where(participants > 0,
-                        self._waves(participants) *
-                        np.max(np.where(trace > 0, up_r[None, :], 0.0),
-                               axis=1),
-                        0.0)
-        t_down = self.link.down_s(self.bytes_down())
-        times = t_comp + t_up + t_down
+        # split latency from transfer so bucketing can divide the transfer
+        # while charging the per-message latency per bucket
+        lat = self.link.latency_s
+        B = self.num_buckets
+        xfer_r = up_r - lat                                    # (N,) s
+        xfer_max = np.max(np.where(trace > 0, xfer_r[None, :], 0.0), axis=1)
+        waves = self._waves(participants)
+        has_up = (participants > 0).astype(np.float64)
+        down_xfer = self.link.down_s(self.bytes_down()) - lat
+        if self.overlap and B > 1:
+            # pipelined bucket schedule: pack -> uplink -> downlink stream
+            # over B equal buckets; after the pipeline fills, each extra
+            # bucket costs only the bottleneck stage.  All-straggler steps
+            # still broadcast the zero aggregate per bucket (zero uplink).
+            pack_b = self.pack_s / B
+            up_b = has_up * waves * (lat + xfer_max / B)
+            down_b = lat + down_xfer / B
+            bottleneck = np.maximum(np.maximum(pack_b, up_b), down_b)
+            t_agg = pack_b + up_b + down_b + (B - 1) * bottleneck
+        else:
+            t_up = has_up * waves * (B * lat + xfer_max)
+            t_down = B * lat + down_xfer
+            t_agg = self.pack_s + t_up + t_down
+        times = t_comp + t_agg
         bytes_up = trace @ b_up_r
         bytes_down = np.full((T,), float(N * self.bytes_down()))
         return times, bytes_up, bytes_down

@@ -53,3 +53,20 @@ def test_parity_holds_on_pallas_backend():
         rep = run_parity(comp, T=10, backend="pallas")
         assert_parity(rep)
     """, timeout=900)
+
+
+@pytest.mark.slow
+def test_parity_holds_through_bucketed_schedules():
+    """The gate also holds with the mesh side splitting the flat vector
+    into buckets, under BOTH issue orders: the (unbucketed) reference EF
+    loop == the bucketed mesh step, serial or pipelined — overlap is a
+    pure reordering, never a numerics change."""
+    run_sub("""
+    from repro.launch.parity import assert_parity, run_parity
+    for comp in ("sign", "block_topk"):
+        for sched in ("serial", "pipelined"):
+            rep = run_parity(comp, T=10, num_buckets=2,
+                             bucket_schedule=sched)
+            assert_parity(rep)
+            assert rep["loss_ref"] < rep["loss_start"], (comp, sched, rep)
+    """, timeout=900)

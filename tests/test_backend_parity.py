@@ -238,3 +238,50 @@ def test_coco_mode_drops_dead_c_concat():
     b_cocoef = hlo_cost.analyze(lowered("cocoef").compile().as_text(), 8).bytes
     assert b_coco < b_cocoef, (b_coco, b_cocoef)
     """, timeout=600)
+
+
+# ---------------------------------------------------------------------------
+# bucket schedule: pipelined (double-buffered overlap) == serial, bitwise
+# ---------------------------------------------------------------------------
+
+def test_schedule_parity_serial_vs_pipelined():
+    """bucket_schedule="pipelined" issues bucket i's collective before
+    running bucket i+1's fused local step (compute/comm overlap); it is
+    the SAME ops in a different issue order, so it must stay bit-for-bit
+    equal to the serial schedule for every mode x wire x wire-dtype x
+    mask — including a total outage."""
+    run_sub("""
+    from jax.sharding import PartitionSpec as P
+    from repro.core.cocoef import CocoEFConfig, cocoef_update
+    mesh = make_mesh((4, 2), ("data", "model"))
+    n = 2048   # per-device flat: multiple of 4 chunks * 64 block * 4 buckets
+    gamma = 0.1
+    g = jax.random.normal(jax.random.PRNGKey(6), (8 * n,))
+    e = jax.random.normal(jax.random.PRNGKey(7), (8 * n,)) * 0.1
+    masks = [jnp.ones((4,)), jnp.array([1., 0., 1., 1.]), jnp.zeros((4,))]
+    cases = [("cocoef", "sign", "float32"),
+             ("cocoef", "block_topk", "float32"),
+             ("cocoef", "block_topk", "bfloat16"),
+             ("coco", "sign", "float32")]
+    for mode, comp, wdt in cases:
+        outs = {}
+        for sched in ("serial", "pipelined"):
+            ccfg = CocoEFConfig(coding_axes=("data",), group_size=32,
+                                compressor=comp, block_size=64,
+                                k_per_block=4, wire_dtype=wdt, mode=mode,
+                                num_buckets=4, bucket_schedule=sched,
+                                backend="jnp")
+            f = shard_map(lambda gg, ee, mm: cocoef_update(
+                              gg, ee, mm, gamma, ccfg),
+                          mesh, in_specs=(P(("data", "model")),) * 2
+                          + (P(),),
+                          out_specs=(P(("data", "model")),) * 2,
+                          axis_names={"data", "model"}, check=False)
+            jf = jax.jit(f)
+            outs[sched] = [jf(g, e, m) for m in masks]
+        for (g1, e1), (g2, e2) in zip(outs["serial"], outs["pipelined"]):
+            assert np.array_equal(np.asarray(g1), np.asarray(g2)), \
+                ("ghat", mode, comp, wdt)
+            assert np.array_equal(np.asarray(e1), np.asarray(e2)), \
+                ("e_new", mode, comp, wdt)
+    """, timeout=900)

@@ -100,8 +100,12 @@ def test_ef_topk_fused_sweep(k, block, mask):
 
 
 def test_ef_topk_fused_conservation():
-    """c + e_new reconstruct acc exactly (the sparse wire's fused step keeps
-    the exact kept values in c, so Algorithm 1 conserves bit-for-bit)."""
+    """c + e_new reconstruct acc exactly.  `c` is the TRANSMITTED
+    reconstruction (normalize -> value_dtype -> denormalize, what a
+    receiver unpacks from the wire); at the default value_dtype="float32"
+    the rounding is the identity, so c holds the exact kept values, and
+    for narrower wire dtypes Sterbenz keeps `acc - c` exact anyway
+    (tests/test_topk_select.py covers bfloat16)."""
     from repro.kernels.topk_pack import ef_topk_fused
     n, k, block = 8 * 128, 8, 128
     gv = jax.random.normal(jax.random.PRNGKey(5), (n,))

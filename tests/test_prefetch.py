@@ -1,0 +1,129 @@
+"""Host->device batch prefetcher + coded batch stream.
+
+`pipeline.prefetch_to_device` stages device_put one step ahead on a
+background thread; consuming it must be INDISTINGUISHABLE from mapping
+device_put over the source iterator — same order, same values, exceptions
+re-raised at the consumer — and abandoning it early must not leak a
+blocked worker thread.  `pipeline.coded_batch_stream` is the generator
+half: deterministic in (key, step), so prefetch depth can never change
+what any step trains on.
+"""
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import coding
+from repro.data import pipeline
+
+
+def _no_prefetch_threads(timeout_s: float = 3.0) -> bool:
+    """Wait for every repro-prefetch worker to wind down."""
+    deadline = time.monotonic() + timeout_s
+    while time.monotonic() < deadline:
+        if not [t for t in threading.enumerate()
+                if t.name == "repro-prefetch" and t.is_alive()]:
+            return True
+        time.sleep(0.05)
+    return False
+
+
+def test_prefetch_preserves_order_and_values():
+    items = [np.full((4,), i, np.float32) for i in range(10)]
+    out = list(pipeline.prefetch_to_device(iter(items), size=2))
+    assert len(out) == 10
+    for i, o in enumerate(out):
+        assert isinstance(o, jax.Array)        # device-resident
+        np.testing.assert_array_equal(np.asarray(o), items[i])
+    assert _no_prefetch_threads()
+
+
+def test_prefetch_matches_direct_device_put_on_pytrees():
+    def gen():
+        for i in range(6):
+            yield {"toks": np.arange(3, dtype=np.int32) + i,
+                   "w": (np.ones(2, np.float32) * i,)}
+
+    direct = [jax.device_put(b) for b in gen()]
+    staged = list(pipeline.prefetch_to_device(gen(), size=3))
+    assert len(direct) == len(staged)
+    for d, p in zip(direct, staged):
+        for x, y in zip(jax.tree.leaves(d), jax.tree.leaves(p)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_prefetch_reraises_source_exception():
+    def gen():
+        yield np.zeros(2, np.float32)
+        raise RuntimeError("synthetic pipeline failure")
+
+    it = pipeline.prefetch_to_device(gen(), size=2)
+    np.testing.assert_array_equal(np.asarray(next(it)), np.zeros(2))
+    with pytest.raises(RuntimeError, match="synthetic pipeline failure"):
+        next(it)
+    assert _no_prefetch_threads()
+
+
+def test_prefetch_early_abandonment_stops_worker():
+    """Closing the consumer generator mid-stream (the crash-resume path)
+    must unblock and terminate the worker even though the source is
+    infinite and the queue is full."""
+    produced = []
+
+    def gen():
+        i = 0
+        while True:
+            produced.append(i)
+            yield np.full((2,), i, np.float32)
+            i += 1
+
+    it = pipeline.prefetch_to_device(gen(), size=2)
+    next(it)
+    next(it)
+    it.close()                      # generator finally -> stop event
+    assert _no_prefetch_threads()
+    n_after_close = len(produced)
+    time.sleep(0.2)                 # a leaked worker would keep producing
+    assert len(produced) == n_after_close
+
+
+def test_prefetch_size_validation():
+    with pytest.raises(ValueError):
+        next(pipeline.prefetch_to_device(iter([]), size=0))
+
+
+def test_coded_batch_stream_matches_per_step_batches():
+    """The stream at any start_step yields exactly coded_train_batch(t):
+    prefetching is a pure reordering of WHEN batches are built."""
+    N, d, p = 4, 2, 0.25
+    alloc = coding.cyclic_allocation(N, N, d)
+    W = coding.encode_weights(alloc, p)
+    key = jax.random.PRNGKey(0)
+    stream = pipeline.coded_batch_stream(key, alloc, W, per_subset=2,
+                                         seq_len=8, vocab=97, start_step=3)
+    for t in range(3, 7):
+        toks, wts = next(stream)
+        rt, rw = pipeline.coded_train_batch(key, t, alloc, W, 2, 8, 97)
+        np.testing.assert_array_equal(np.asarray(toks), np.asarray(rt))
+        np.testing.assert_array_equal(np.asarray(wts), np.asarray(rw))
+
+
+def test_prefetched_coded_stream_end_to_end():
+    """prefetch(coded_batch_stream) == the synchronous loop, batch for
+    batch — the exact composition launch.train.batch_stream runs."""
+    N, d, p = 4, 4, 0.2
+    alloc = coding.cyclic_allocation(N, N, d)
+    W = coding.encode_weights(alloc, p)
+    key = jax.random.PRNGKey(7)
+    it = pipeline.prefetch_to_device(
+        pipeline.coded_batch_stream(key, alloc, W, 2, 8, 61), size=2)
+    for t in range(5):
+        toks, wts = next(it)
+        rt, rw = pipeline.coded_train_batch(key, t, alloc, W, 2, 8, 61)
+        np.testing.assert_array_equal(np.asarray(toks), np.asarray(rt))
+        np.testing.assert_array_equal(np.asarray(wts), np.asarray(rw))
+    it.close()
+    assert _no_prefetch_threads()

@@ -304,3 +304,96 @@ def test_fig8_smoke_sign_dominates_dense(tmp_path, monkeypatch):
         assert t2t["cocoef_sign"] is not None
         assert t2t["sgc_dense"] is None or \
             t2t["cocoef_sign"] < t2t["sgc_dense"]
+
+
+# ---------------------------------------------------------------------------
+# cost model: bucketed aggregation + overlap-aware pipelined schedule
+# ---------------------------------------------------------------------------
+
+def _agg_parts(timer, mask):
+    """(compute, aggregation) split of one step for hand-derived checks."""
+    t = timer.step_time(mask)
+    comp = np.asarray(timer.compute.rank_seconds(len(mask)))
+    m = np.asarray(mask, np.float64)
+    t_comp = np.max(np.where(m > 0, comp, 0.0)) if m.sum() else comp.max()
+    return t_comp, t - t_comp
+
+
+def test_step_timer_bucket_defaults_reduce_to_old_formula():
+    """num_buckets=1 / overlap=False / pack_s=0 (the defaults) must price
+    exactly the pre-bucketing model: up + down with one latency each."""
+    link = LinkProfile(bandwidth_gbps=10.0, down_bandwidth_gbps=100.0,
+                       latency_s=1e-3, server_fanin=0)
+    comp = ComputeProfile(grad_s=4e-3)
+    wire = SignWire(group_size=512)
+    base = StepTimer(wire=wire, n=1 << 20, link=link, compute=comp)
+    expect = 4e-3 + link.up_s(base.bytes_up()) + link.down_s(
+        base.bytes_down())
+    assert base.step_time([1, 1, 1, 1]) == pytest.approx(expect)
+    # B=1 makes the overlap flag a no-op by construction
+    b1 = StepTimer(wire=wire, n=1 << 20, link=link, compute=comp,
+                   num_buckets=1, overlap=True)
+    assert b1.step_time([1, 1, 1, 1]) == pytest.approx(expect)
+
+
+def test_step_timer_serial_buckets_add_per_message_latency_only():
+    """Serial bucketing splits the transfers but pays the per-message
+    latency once per bucket on each of uplink and downlink: exactly
+    2*(B-1)*latency over the single-shot step (fanin off)."""
+    link = LinkProfile(bandwidth_gbps=10.0, down_bandwidth_gbps=100.0,
+                       latency_s=1e-3, server_fanin=0)
+    comp = ComputeProfile(grad_s=4e-3)
+    wire = SignWire(group_size=512)
+    mask = [1, 1, 1, 1]
+    t1 = StepTimer(wire=wire, n=1 << 20, link=link,
+                   compute=comp).step_time(mask)
+    for B in (2, 4, 8):
+        tb = StepTimer(wire=wire, n=1 << 20, link=link, compute=comp,
+                       num_buckets=B).step_time(mask)
+        assert tb == pytest.approx(t1 + 2 * (B - 1) * link.latency_s)
+
+
+def test_step_timer_overlap_pays_bottleneck_not_sum():
+    """Pipelined schedule: t_agg = fill (one bucket through all stages)
+    + (B-1) * bottleneck stage — checked against the closed form, and
+    never worse than serial."""
+    link = LinkProfile(bandwidth_gbps=10.0, down_bandwidth_gbps=100.0,
+                       latency_s=1e-3, server_fanin=0)
+    comp = ComputeProfile(grad_s=4e-3)
+    wire = SignWire(group_size=512)
+    mask = [1, 1, 1, 1]
+    pack_s = 2e-3
+    for B in (2, 4, 8):
+        serial = StepTimer(wire=wire, n=1 << 20, link=link, compute=comp,
+                           num_buckets=B, pack_s=pack_s)
+        pipe = StepTimer(wire=wire, n=1 << 20, link=link, compute=comp,
+                         num_buckets=B, overlap=True, pack_s=pack_s)
+        lat = link.latency_s
+        pack_b = pack_s / B
+        up_b = lat + (link.up_s(serial.bytes_up()) - lat) / B
+        down_b = lat + (link.down_s(serial.bytes_down()) - lat) / B
+        expect_agg = pack_b + up_b + down_b \
+            + (B - 1) * max(pack_b, up_b, down_b)
+        _, agg = _agg_parts(pipe, mask)
+        assert agg == pytest.approx(expect_agg)
+        # overlap can only help: serial == B * (sum of per-bucket stages)
+        assert pipe.step_time(mask) < serial.step_time(mask)
+
+
+def test_step_timer_overlap_all_straggler_still_broadcasts():
+    """A total outage under the pipelined schedule keeps the single
+    all-straggler semantics: full compute window, ZERO uplink time, and
+    the zero-aggregate broadcast still streams bucket by bucket."""
+    link = LinkProfile(bandwidth_gbps=10.0, down_bandwidth_gbps=100.0,
+                       latency_s=1e-3, server_fanin=0)
+    comp = ComputeProfile(grad_s=4e-3)
+    wire = SignWire(group_size=512)
+    timer = StepTimer(wire=wire, n=1 << 20, link=link, compute=comp,
+                      num_buckets=4, overlap=True)
+    down_b = link.latency_s + (link.down_s(timer.bytes_down())
+                               - link.latency_s) / 4
+    assert timer.step_time([0, 0, 0, 0]) == pytest.approx(
+        4e-3 + down_b + 3 * down_b)
+    # and zero uplink bytes on the ledger, like the single-shot model
+    _, b_up, _ = timer.steps(np.zeros((1, 4)))
+    assert b_up[0] == 0.0
