@@ -209,3 +209,37 @@ def markov_burst(p: float, mean_burst: float) -> float:
     r = p*q/(1-p) <= 1-q (q = 1/mean_burst), i.e. mean_burst >= 1/(1-p) —
     sweeps over p must lengthen the burst at the high end."""
     return max(mean_burst, 1.0 / (1.0 - p) + 1e-9)
+
+
+def run_metadata(**knobs) -> dict:
+    """Provenance stamp embedded in every benchmark results JSON (and the
+    telemetry JSONL's run_meta record): git sha, jax version, backend,
+    device count — plus whatever run knobs the caller passes (seed,
+    straggler process, backend requested/ran, config overrides).  A
+    results file then identifies the exact code + environment that
+    produced it without consulting the shell history."""
+    import platform
+    import subprocess
+    import sys
+
+    sha = None
+    try:
+        r = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            cwd=Path(__file__).resolve().parents[1],
+            capture_output=True, text=True, timeout=10)
+        if r.returncode == 0:
+            sha = r.stdout.strip()
+    except Exception:
+        pass
+    meta = {
+        "git_sha": sha,
+        "jax_version": jax.__version__,
+        "python": sys.version.split()[0],
+        "platform": platform.platform(),
+        "jax_backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+    }
+    meta.update(knobs)
+    return meta

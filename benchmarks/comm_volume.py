@@ -88,13 +88,40 @@ def audit_wire_bytes(n: int = 4096):
 
 
 if __name__ == "__main__":
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None,
+                    help="also write the tables (+ run_metadata provenance) "
+                         "as JSON to this path")
+    args = ap.parse_args()
+
     print(f"-- paper accounting (D={D}) --")
-    for name, bits, ratio in run():
+    paper_rows = run()
+    for name, bits, ratio in paper_rows:
         print(f"{name:24s} bits/iter/device={bits:6d}  compression x{ratio:.1f}")
     print(f"\n-- wire formats on the coded collective (n={N_MODEL}) --")
-    for name, nbytes, ratio in run_wires():
+    wire_rows = run_wires()
+    for name, nbytes, ratio in wire_rows:
         print(f"{name:18s} bytes/step/rank={nbytes:10d}  vs dense f32 "
               f"x{ratio:5.1f}")
     audited = audit_wire_bytes()
     print(f"\nwire_bytes audit OK: declared == packed-payload == cost-model "
           f"for {len(audited)} wires")
+    if args.json:
+        try:
+            from . import _repro_common as R
+        except ImportError:
+            import _repro_common as R
+        artifact = {
+            "meta": R.run_metadata(D=D, n_model=N_MODEL),
+            "paper": [{"name": n, "bits_per_iter": int(b),
+                       "compression": float(r)} for n, b, r in paper_rows],
+            "wires": [{"name": n, "bytes_per_step_rank": int(b),
+                       "vs_dense_f32": float(r)} for n, b, r in wire_rows],
+            "audited": audited,
+        }
+        with open(args.json, "w") as f:
+            json.dump(artifact, f, indent=1)
+        print(f"wrote {args.json}")

@@ -195,7 +195,8 @@ def run(T=60, trials=2, smoke=False, link=DEFAULT_LINK,
     mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
     shape = SMOKE_TRAIN
     cells = _cells(smoke)
-    res = {"meta": {"T": T, "trials": trials, "shape": dataclasses.asdict(
+    res = {"meta": {**R.run_metadata(), "T": T, "trials": trials,
+                    "shape": dataclasses.asdict(
                         shape),
                     "mesh": dict(zip(mesh.axis_names, mesh.devices.shape)),
                     "p_straggler": P_STRAG,

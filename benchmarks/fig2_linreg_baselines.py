@@ -36,6 +36,7 @@ def run(trials=5, T=400):
         kw = dict(diff_alpha=alpha) if alpha is not None else {}
         res[name] = R.run_trials(method, comp, trials=trials,
                                  d=5, p=0.2, gamma=lr, T=T, **kw)
+    res["meta"] = R.run_metadata(trials=trials, T=T)
     OUT.mkdir(parents=True, exist_ok=True)
     (OUT / "fig2.json").write_text(json.dumps(res, indent=1))
     return res
@@ -44,4 +45,6 @@ def run(trials=5, T=400):
 if __name__ == "__main__":
     r = run()
     for k, v in r.items():
+        if k == "meta":
+            continue
         print(f"{k:22s} final_loss={v['loss'][-1]:.1f}")

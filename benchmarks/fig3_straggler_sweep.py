@@ -46,7 +46,8 @@ def run(trials=5, T=400, wires=tuple(WIRES), straggler="iid", N=100,
             res[f"{wname},p={p}"] = R.run_trials(
                 method, comp, trials=trials, N=N, M=N, d=2, p=p, gamma=1e-5,
                 T=T, straggler=proc)
-    res["meta"] = {"straggler": straggler, "wires": list(wires), "N": N}
+    res["meta"] = {**R.run_metadata(trials=trials, T=T),
+                   "straggler": straggler, "wires": list(wires), "N": N}
     out = OUT or R.results_dir()
     out.mkdir(parents=True, exist_ok=True)
     suffix = "" if straggler == "iid" else f"_{straggler}"

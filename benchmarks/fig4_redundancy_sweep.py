@@ -16,6 +16,7 @@ def run(trials=5, T=400):
     for d in DS:
         res[f"d={d}"] = R.run_trials("cocoef", C.GroupedSign(), trials=trials,
                                      d=d, p=0.9, gamma=1e-5, T=T)
+    res["meta"] = R.run_metadata(trials=trials, T=T, p=0.9, ds=DS)
     OUT.mkdir(parents=True, exist_ok=True)
     (OUT / "fig4.json").write_text(json.dumps(res, indent=1))
     return res
@@ -23,4 +24,6 @@ def run(trials=5, T=400):
 
 if __name__ == "__main__":
     for k, v in run().items():
+        if k == "meta":
+            continue
         print(f"{k:8s} final_loss={v['loss'][-1]:.1f}")

@@ -22,6 +22,7 @@ def run(trials=5, T=400):
     for name, (m, comp) in CASES.items():
         res[name] = R.run_trials(m, comp, trials=trials, d=5, p=0.2,
                                  gamma=1e-5, T=T)
+    res["meta"] = R.run_metadata(trials=trials, T=T)
     OUT.mkdir(parents=True, exist_ok=True)
     (OUT / "fig5.json").write_text(json.dumps(res, indent=1))
     return res
@@ -29,4 +30,6 @@ def run(trials=5, T=400):
 
 if __name__ == "__main__":
     for k, v in run().items():
+        if k == "meta":
+            continue
         print(f"{k:14s} final_loss={v['loss'][-1]:.1f}")

@@ -20,6 +20,7 @@ def run(trials=5, T=400):
                                  d=2, p=0.5, T=T,
                                  gamma_fn=lambda t: 2e-5 / math.sqrt(t + 1)),
     }
+    res["meta"] = R.run_metadata(trials=trials, T=T, p=0.5, d=2)
     OUT.mkdir(parents=True, exist_ok=True)
     (OUT / "fig6.json").write_text(json.dumps(res, indent=1))
     return res

@@ -25,6 +25,7 @@ def run(trials=3, T=300):
         res[f"unbiased_d={d}"] = R.run_trials(
             "unbiased", C.StochasticSign(), task="classification",
             trials=trials, d=d, p=0.6, gamma=1e-3, T=T, record_every=25)
+    res["meta"] = R.run_metadata(trials=trials, T=T, p=0.6, ds=DS)
     OUT.mkdir(parents=True, exist_ok=True)
     (OUT / "fig7.json").write_text(json.dumps(res, indent=1))
     return res
@@ -32,4 +33,6 @@ def run(trials=3, T=300):
 
 if __name__ == "__main__":
     for k, v in run().items():
+        if k == "meta":
+            continue
         print(f"{k:16s} loss={v['loss'][-1]:.3f} test_acc={v['test_acc'][-1]:.3f}")

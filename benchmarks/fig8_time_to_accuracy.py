@@ -78,8 +78,8 @@ def run(trials=3, T=400, N=100, p=0.2, gamma=1e-5, record_every=20,
         num_buckets=1, overlap=False, smoke=False, out_dir=None):
     if smoke:
         trials, T, N, record_every = 1, 60, 20, 5
-    res = {"meta": {"n_wire": n_wire, "p": p, "trials": trials, "T": T,
-                    "N": N, "gamma": gamma,
+    res = {"meta": {**R.run_metadata(), "n_wire": n_wire, "p": p,
+                    "trials": trials, "T": T, "N": N, "gamma": gamma,
                     "num_buckets": num_buckets, "overlap": overlap,
                     "link": dataclasses.asdict(link),
                     "compute": dataclasses.asdict(compute),

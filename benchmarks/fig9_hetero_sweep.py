@@ -115,7 +115,8 @@ def run(trials=3, T=400, N=60, gamma=2e-5, record_every=20, d=3,
     dim = N // 2                        # overdetermined: bias => plateau
     wire = SignWire(group_size=512)
     timer = StepTimer(wire=wire, n=n_wire, link=link, compute=compute)
-    res = {"meta": {"n_wire": n_wire, "trials": trials, "T": T, "N": N,
+    res = {"meta": {**R.run_metadata(), "n_wire": n_wire,
+                    "trials": trials, "T": T, "N": N,
                     "dim": dim, "d": d, "gamma": gamma,
                     "two_class": {"p_slow": P_SLOW, "p_fast": P_FAST,
                                   "slow_fraction": SLOW_FRACTION},

@@ -42,6 +42,11 @@ from repro.kernels import ops, ref
 from repro.kernels.sign_pack import G_BLK as _SIGN_G_BLK
 from repro.kernels.topk_pack import R_BLK as _TOPK_R_BLK
 
+try:
+    from . import _repro_common as R
+except ImportError:
+    import _repro_common as R
+
 N_DEFAULT = 1 << 22     # 4M-element gradient slice
 GROUP = 512
 K, BLOCK = 16, 512
@@ -127,7 +132,8 @@ def run(n: int = N_DEFAULT, iters: int = 20, backend: str = "auto"):
     enew_fn = jax.jit(lambda c, w, s, a, ee:
                       (w, s, c, jnp.where(mask_self > 0, a - c, ee)))
     unfused = _pipeline(acc_fn, pack_fn, unpack_fn, enew_fn)
-    s_use = ops.resolve_use_pallas(use_req, n, _SIGN_G_BLK * GROUP)
+    s_use = ops.resolve_use_pallas(use_req, n, _SIGN_G_BLK * GROUP,
+                                   op="ef_sign_fused", dtype="float32")
     fused = jax.jit(lambda g, ee: ops.ef_sign_fused(g, ee, gamma, mask_self,
                                                     GROUP, use_pallas=s_use))
     uw, us_, uc, ue = unfused(x, e)
@@ -148,7 +154,8 @@ def run(n: int = N_DEFAULT, iters: int = 20, backend: str = "auto"):
     tenew_fn = jax.jit(lambda c, i, v, s, a, ee:
                        (i, v, s, c, jnp.where(mask_self > 0, a - c, ee)))
     tunfused = _pipeline(tacc_fn, tpack_fn, tunpack_fn, tenew_fn)
-    t_use = ops.resolve_use_pallas(use_req, n, _TOPK_R_BLK * BLOCK)
+    t_use = ops.resolve_use_pallas(use_req, n, _TOPK_R_BLK * BLOCK,
+                                   op="ef_topk_fused", dtype="float32")
     tfused = jax.jit(lambda g, ee: ops.ef_topk_fused(g, ee, gamma, mask_self,
                                                      K, BLOCK,
                                                      use_pallas=t_use))
@@ -171,7 +178,9 @@ def run(n: int = N_DEFAULT, iters: int = 20, backend: str = "auto"):
         jax.jit(lambda ws, ss: (jax.vmap(
             lambda a, b: ref.sign_unpack_ref(a, b, GROUP))(ws, ss),)),
         jax.jit(lambda dec: (mask[:, None] * dec).sum(0)))
-    sd_use = ops.resolve_use_pallas(use_req, nc, _SIGN_G_BLK * GROUP)
+    sd_use = ops.resolve_use_pallas(use_req, nc, _SIGN_G_BLK * GROUP,
+                                    op="sign_decode_reduce",
+                                    dtype="float32")
     dec_fus = jax.jit(lambda ws, ss: ops.sign_decode_reduce(
         ws, ss, mask, GROUP, use_pallas=sd_use))
     _check("sign_decode_reduce", "reduced vector",
@@ -188,7 +197,9 @@ def run(n: int = N_DEFAULT, iters: int = 20, backend: str = "auto"):
         jax.jit(lambda a, b, c: (jax.vmap(
             lambda i, v, sc: ref.topk_unpack_ref(i, v, sc, BLOCK))(a, b, c),)),
         jax.jit(lambda dec: (mask[:, None] * dec).sum(0)))
-    td_use = ops.resolve_use_pallas(use_req, nc, _TOPK_R_BLK * BLOCK)
+    td_use = ops.resolve_use_pallas(use_req, nc, _TOPK_R_BLK * BLOCK,
+                                    op="topk_decode_reduce",
+                                    dtype="float32")
     tdec_fus = jax.jit(lambda a, b, c: ops.topk_decode_reduce(
         a, b, c, mask, BLOCK, use_pallas=td_use))
     _check("topk_decode_reduce", "reduced vector",
@@ -236,7 +247,9 @@ def main():
         artifact = {"n": args.n, "iters": args.iters,
                     "jax": jax.__version__,
                     "backend_requested": args.backend,
-                    "backend": jax.default_backend(), "rows": rows}
+                    "backend": jax.default_backend(),
+                    "meta": R.run_metadata(backend_requested=args.backend),
+                    "rows": rows}
         with open(args.json, "w") as f:
             json.dump(artifact, f, indent=2)
         print(f"wrote {args.json}")

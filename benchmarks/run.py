@@ -65,7 +65,8 @@ def main() -> None:
                                   for k, v in r.items() if k != "meta")))
     us, d = _fig("fig4", f4.run,
                  lambda r: "|".join(f"{k}={v['loss'][-1]:.1f}"
-                                    for k, v in r.items()), 2, 200)
+                                    for k, v in r.items()
+                                    if k != "meta"), 2, 200)
     rows.append(("fig4_redundancy", us, d))
     us, d = _fig("fig5", f5.run,
                  lambda r: (f"cocoef_topk={r['cocoef_topk']['loss'][-1]:.1f}"
@@ -79,7 +80,8 @@ def main() -> None:
     us, d = _fig("fig7", f7.run,
                  lambda r: "|".join(f"{k}={v['test_acc'][-1]:.3f}"
                                     for k, v in r.items()
-                                    if not k.endswith("_std")), 1, 100)
+                                    if k != "meta"
+                                    and not k.endswith("_std")), 1, 100)
     rows.append(("fig7_heterogeneous_cls", us, d))
 
     def _fig8_headline(r):

@@ -23,6 +23,16 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=24)
     ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--metrics", action="store_true",
+                    help="serve-plane telemetry (repro.obs): per-request "
+                         "queue wait + prefill/decode p50/p99 histograms, "
+                         "JSONL records and a Chrome trace")
+    ap.add_argument("--requests", type=int, default=4,
+                    help="--metrics: simulated request arrivals served "
+                         "sequentially (queue wait = service start - "
+                         "arrival)")
+    ap.add_argument("--metrics-dir", default="/tmp/repro_serve_metrics",
+                    help="where --metrics writes serve.jsonl + trace.json")
     args = ap.parse_args()
 
     from repro.compat import make_mesh
@@ -41,6 +51,10 @@ def main():
 
     # prefill by decoding the prompt into the cache (same kernels the
     # decode_32k cell lowers), then sample greedily.
+    if args.metrics:
+        serve_with_metrics(args, setup, params, prompts, total)
+        return
+
     caches = model.init_caches(args.batch, total)
     caches = jax.device_put(caches, setup.cache_shardings)
     jdecode = jax.jit(setup.decode_step,
@@ -58,6 +72,67 @@ def main():
     print(f"arch={args.arch} batch={args.batch} "
           f"prompt={args.prompt_len} generated={gen.shape[1]} tokens")
     print("sampled token ids:\n", gen)
+
+
+def serve_with_metrics(args, setup, params, prompts, total):
+    """Serve --requests sequential requests through the instrumented
+    steps: each request decodes its prompt batch end to end; requests
+    queue behind the one in service (queue wait = service start -
+    arrival), the request-level view the serve_summary histograms and
+    the Chrome trace report."""
+    import sys
+    from pathlib import Path
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1]
+                           / "benchmarks"))
+    from _repro_common import run_metadata
+    from repro.launch.serve import instrument_steps
+    from repro.obs import (MetricsLogger, ServeTelemetry, span_events,
+                           write_chrome_trace)
+
+    tel = ServeTelemetry()
+    rec = tel.recorder
+    _, decode = instrument_steps(setup, tel)
+    model = setup.model
+
+    arrival = rec.now()    # all requests arrive up front (a burst): the
+    #                        k-th request's queue wait is the service time
+    #                        of the k-1 ahead of it
+    for rid in range(args.requests):
+        start = rec.now()
+        with rec.span("serve/request", tid="requests", request_id=rid):
+            caches = jax.device_put(model.init_caches(args.batch, total),
+                                    setup.cache_shardings)
+            n_pref = len(tel.prefill_s)
+            n_dec = len(tel.decode_token_s)
+            tok = prompts[:, :1]
+            gen_tokens = 0
+            for t in range(total - 1):
+                logits, caches = decode(params, caches, tok, jnp.int32(t))
+                if t < args.prompt_len - 1:
+                    tok = prompts[:, t + 1:t + 2]
+                else:
+                    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+                    gen_tokens += args.batch
+        # the teacher-forced prompt pass is this request's "prefill",
+        # the sampled steps its decode
+        pref = sum(tel.decode_token_s[n_dec:n_dec + args.prompt_len - 1])
+        dec = sum(tel.decode_token_s[n_dec + args.prompt_len - 1:])
+        tel.add_prefill(pref)
+        tel.add_request(rid, queue_wait_s=start - arrival,
+                        prefill_s=pref, decode_s=dec, tokens=gen_tokens)
+
+    mdir = Path(args.metrics_dir)
+    meta = run_metadata(arch=args.arch, batch=args.batch,
+                        prompt_len=args.prompt_len,
+                        new_tokens=args.new_tokens,
+                        requests=args.requests, path="serve")
+    with MetricsLogger(str(mdir / "serve.jsonl"),
+                       run_metadata=meta) as logger:
+        tel.log_to(logger)
+    tpath = str(mdir / "trace.json")
+    write_chrome_trace(tpath, span_events(rec.spans, pid=0), metadata=meta)
+    print(tel.format_summary())
+    print(f"telemetry -> {mdir / 'serve.jsonl'}; trace -> {tpath}")
 
 
 if __name__ == "__main__":

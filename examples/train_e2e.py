@@ -81,6 +81,13 @@ def main():
                          "slow-uplink ranks send fewer coords per block")
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_e2e_ckpt")
+    ap.add_argument("--metrics", action="store_true",
+                    help="step-level telemetry (repro.obs): in-graph "
+                         "MetricsFrame -> JSONL metrics + a Chrome trace "
+                         "of measured host spans alongside the StepTimer-"
+                         "PREDICTED schedule for the observed masks")
+    ap.add_argument("--metrics-dir", default="/tmp/repro_e2e_metrics",
+                    help="where --metrics writes metrics.jsonl + trace.json")
     args = ap.parse_args()
 
     from repro.compat import make_mesh
@@ -133,7 +140,8 @@ def main():
                        straggler_spread=args.straggler_spread,
                        straggler_trace=trace_path,
                        rate_aware=not args.mean_rate_coding,
-                       k_budgets=k_budgets)
+                       k_budgets=k_budgets,
+                       metrics=args.metrics)
         setup = build_train_setup(spec, mesh, shape, run, smoke=True)
     except ValueError as e:        # bad straggler/coding knobs fail HERE,
         ap.error(str(e))           # not as NaNs deep inside jit
@@ -154,6 +162,28 @@ def main():
         params, e = st["params"], st["e"]
         print(f"resumed from step {start}")
 
+    logger = rec = None
+    masks = []
+    if args.metrics:
+        import sys
+        sys.path.insert(0, str(Path(__file__).resolve().parents[1]
+                               / "benchmarks"))
+        from _repro_common import run_metadata
+        from repro.obs import MetricsLogger, SpanRecorder, frame_to_host
+        mdir = Path(args.metrics_dir)
+        meta = run_metadata(
+            arch=args.arch, steps=args.steps, seed=run.seed,
+            mode=run.mode, compressor=args.compressor,
+            num_buckets=args.num_buckets,
+            bucket_schedule=args.bucket_schedule,
+            backend_requested=args.backend, straggler=args.straggler,
+            straggler_p=spec.coding.straggler_p, prefetch=args.prefetch,
+            rate_aware=run.rate_aware, n_code=setup.n_code,
+            flat_pad=setup.flat_pad)
+        logger = MetricsLogger(str(mdir / "metrics.jsonl"),
+                               run_metadata=meta)
+        rec = SpanRecorder()
+
     jstep = jax.jit(setup.train_step)
     # batches arrive device-resident, staged --prefetch steps ahead by the
     # background prefetcher while the mesh runs the current step
@@ -161,9 +191,25 @@ def main():
                            smoke=True, prefetch=run.prefetch)
     try:
         for t in range(start, args.steps):
-            batch = next(batches)
-            params, e, opt, m = jstep(params, e, opt, batch,
-                                      jnp.int32(t), key)
+            if rec is None:
+                batch = next(batches)
+                params, e, opt, m = jstep(params, e, opt, batch,
+                                          jnp.int32(t), key)
+            else:
+                with rec.span("train/batch_wait", step=t):
+                    batch = next(batches)
+                if hasattr(batches, "stats"):
+                    rec.counter("prefetch_depth", batches.stats.max_depth)
+                with rec.span("train/step_dispatch", step=t):
+                    params, e, opt, m = jstep(params, e, opt, batch,
+                                              jnp.int32(t), key)
+                with rec.span("train/result_fetch", step=t):
+                    tel = frame_to_host(jax.device_get(m["telemetry"]))
+                    loss = float(m["loss"])
+                span_s = {s["name"]: s["t1"] - s["t0"]
+                          for s in rec.spans[-3:]}
+                logger.log_step(t, tel, loss=loss, spans=span_s)
+                masks.append(tel["participation"])
             if t % 10 == 0 or t == args.steps - 1:
                 print(f"step {t:4d} loss={float(m['loss']):.4f}")
             if (t + 1) % args.ckpt_every == 0:
@@ -171,7 +217,37 @@ def main():
                                     {"params": params, "e": e})
                 print(f"  checkpointed -> {p.name}")
     finally:
+        if rec is not None and hasattr(batches, "stats"):
+            logger.log_prefetch(batches.stats.snapshot())
         batches.close()     # stop + join the prefetch worker before exit
+
+    if rec is not None:
+        # Chrome trace: measured host spans (pid 0) + the StepTimer
+        # PREDICTION for the same observed masks (pid 1) — open both in
+        # chrome://tracing and compare lane by lane
+        import numpy as np
+        from repro.obs import span_events, steptimer_timeline, \
+            write_chrome_trace
+        from repro.sim import StepTimer
+        wire = setup.cocoef_cfg.wire_format(
+            setup.flat_pad // run.num_buckets, 1)
+        timer = StepTimer(wire=wire, n=setup.flat_pad,
+                          num_buckets=run.num_buckets,
+                          overlap=run.bucket_schedule == "pipelined")
+        sim_ev, sim_t = steptimer_timeline(
+            timer, np.asarray(masks, np.float64), pid=1)
+        events = span_events(rec.spans, pid=0, counters=rec.counters) \
+            + sim_ev
+        tpath = str(Path(args.metrics_dir) / "trace.json")
+        write_chrome_trace(tpath, events, metadata=meta)
+        logger.close()
+        ew = logger.rates
+        print(f"telemetry -> {logger.path} ({logger.steps_logged} steps); "
+              f"trace -> {tpath}")
+        print(f"EWMA participation rates: "
+              f"{[round(float(x), 3) for x in ew]}")
+        print(f"StepTimer-predicted mean step: {sim_t.mean()*1e3:.2f} ms "
+              f"(simulated link; measured host spans in the trace)")
 
 
 if __name__ == "__main__":

@@ -31,11 +31,13 @@ from typing import Callable, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 from repro.compat import axis_size
 from repro.kernels import ref as kernel_ref
 from repro.kernels.ops import backend_use_pallas
+from repro.obs.metrics import MetricsFrame, norm_sq
 from .collectives import (CodingCollectiveConfig, DenseWire, SignWire,
                           SparseWire, WireFormat, coded_allreduce_start,
                           dense_allreduce, two_phase_coded_allreduce)
@@ -234,7 +236,7 @@ def cocoef_update(g_local: jnp.ndarray, e_local: jnp.ndarray,
                   mask: Optional[jnp.ndarray], gamma, cfg: CocoEFConfig,
                   *, mask_provider: Optional[Callable] = None,
                   key: Optional[jnp.ndarray] = None,
-                  step=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+                  step=None, want_metrics: bool = False):
     """One Algorithm-1 update on the device-local flat slice.
 
     g_local: (n,) local slice of this coding rank's coded gradient.
@@ -247,8 +249,18 @@ def cocoef_update(g_local: jnp.ndarray, e_local: jnp.ndarray,
              (key, step) so every coding rank derives the identical mask
              without communication; called here (inside the shard_map /
              jit scope), with `key`/`step` threaded through.
-    Returns (ghat_local, new_e_local); ghat is sum_i mask_i C_or_id(acc_i),
-    already scaled by gamma per eq. (4): apply as  params -= ghat.
+    want_metrics: when True additionally return a `repro.obs.MetricsFrame`
+             of in-graph telemetry (per-rank wire bytes, EF/compression
+             norms, the acc-vs-C(acc) cosine inputs) — computed from
+             values the step already has plus a local unpack where the
+             hot path skips c; NO extra collectives.  When False (the
+             default) the traced computation is `_cocoef_update_impl`,
+             the pre-telemetry body verbatim, so the compiled step is
+             byte-identical to a build without metrics (pinned by
+             tests/test_obs.py).
+    Returns (ghat_local, new_e_local) — plus the frame when requested;
+    ghat is sum_i mask_i C_or_id(acc_i), already scaled by gamma per
+    eq. (4): apply as  params -= ghat.
 
     Execution routes through the wire's fused backend (cfg.backend):
     `wire.fused_local_step` produces payload + new error in one pass over
@@ -258,6 +270,16 @@ def cocoef_update(g_local: jnp.ndarray, e_local: jnp.ndarray,
         if mask_provider is None:
             raise ValueError("need a mask or a mask_provider hook")
         mask = mask_provider(key, step)
+    if want_metrics:
+        return _cocoef_update_metrics(g_local, e_local, mask, gamma, cfg)
+    return _cocoef_update_impl(g_local, e_local, mask, gamma, cfg)
+
+
+def _cocoef_update_impl(g_local: jnp.ndarray, e_local: jnp.ndarray,
+                        mask: jnp.ndarray, gamma, cfg: CocoEFConfig
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """The metrics-free update — the pre-telemetry `cocoef_update` body,
+    kept verbatim so the default path provably traces the same HLO."""
     coll = cfg.collective()
     my_idx = coding_rank_index(cfg.coding_axes)
     my_mask = lax.dynamic_index_in_dim(mask, my_idx, keepdims=False)
@@ -311,3 +333,110 @@ def cocoef_update(g_local: jnp.ndarray, e_local: jnp.ndarray,
     ghat = _joined(sched.collect())
     new_e = _joined(e_parts)
     return ghat, new_e.astype(jnp.dtype(cfg.ef_dtype))
+
+
+def _cocoef_update_metrics(g_local: jnp.ndarray, e_local: jnp.ndarray,
+                           mask: jnp.ndarray, gamma, cfg: CocoEFConfig
+                           ) -> Tuple[jnp.ndarray, jnp.ndarray, MetricsFrame]:
+    """`cocoef_update` with an in-graph `MetricsFrame` third output.
+
+    Same math and the same collectives as `_cocoef_update_impl`; the extra
+    work is device-LOCAL only: the wire-byte constants are static numpy
+    (mask-multiplied in-graph), and the compression-quality scalars reuse
+    the c the fused kernels can otherwise skip (want_c=True here, plus a
+    local unpack on the coco path).  The frame's optimizer fields
+    (update/param norms) are zero — `optim.apply_update(want_norms=True)`
+    fills them in the caller."""
+    coll = cfg.collective()
+    my_idx = coding_rank_index(cfg.coding_axes)
+    my_mask = lax.dynamic_index_in_dim(mask, my_idx, keepdims=False)
+    N = mask.shape[0]
+    B = cfg.num_buckets
+    n = g_local.shape[0]
+    f32 = jnp.float32
+    maskf = mask.astype(f32)
+    zero = jnp.zeros((), f32)
+    grad_sq = norm_sq(g_local)
+    down_bytes = float(n * jnp.dtype(cfg.phase2_dtype).itemsize)
+
+    def finish(ghat, e_stored, bytes_rank, bucket_rank, acc_sq, c_sq, dot):
+        # bytes_rank (N,), bucket_rank (B, N): STATIC per-rank phase-1
+        # bytes; "actually sent" = x the participation mask, matching the
+        # StepTimer ledger (trace @ rank_wire_bytes) per step exactly
+        bucket_mine = jnp.take(jnp.asarray(bucket_rank, f32), my_idx, axis=1)
+        return MetricsFrame(
+            participation=maskf,
+            wire_bytes_rank=jnp.asarray(bytes_rank, f32) * maskf,
+            bucket_wire_bytes=bucket_mine * my_mask.astype(f32),
+            bytes_down=jnp.asarray(down_bytes, f32),
+            grad_norm_sq=grad_sq, ef_norm_sq=norm_sq(e_stored),
+            acc_norm_sq=acc_sq, c_norm_sq=c_sq, acc_dot_c=dot,
+            ghat_norm_sq=norm_sq(ghat),
+            update_norm_sq=zero, param_norm_sq=zero)
+
+    if cfg.mode == "dense":
+        acc = gamma * g_local
+        ghat = dense_allreduce(acc, coll, mask)
+        # the dense psum ships the f32 accumulator (SGC baseline wire)
+        bytes_rank = DenseWire(value_dtype="float32").rank_wire_bytes(n, N)
+        bucket_rank = np.repeat(bytes_rank[None].astype(np.float64) / B,
+                                B, axis=0)
+        acc_sq = norm_sq(acc)         # identity compressor: c == acc
+        frame = finish(ghat, e_local, bytes_rank, bucket_rank,
+                       acc_sq, acc_sq, acc_sq)
+        return ghat, e_local, frame
+
+    nd = axis_size(coll.chunk_axis)
+    use_pallas = backend_use_pallas(cfg.backend)
+    acc_sq = c_sq = dot = zero
+    bytes_rank = np.zeros((N,), np.int64)
+    bucket_rows = []
+
+    if cfg.mode == "coco":
+        sched = _BucketSchedule(cfg.bucket_schedule, coll, mask)
+        for acc_b in _bucketed(gamma * g_local, B):
+            wire = cfg.wire_format(acc_b.shape[0], nd)
+            _check_rank_budgets(wire, mask)
+            payload = wire.apply_rank_budget(
+                wire.fused_pack(acc_b, use_pallas=use_pallas), my_idx)
+            c_b = wire.unpack(payload)    # metrics-only local decode
+            acc_sq = acc_sq + norm_sq(acc_b)
+            c_sq = c_sq + norm_sq(c_b)
+            dot = dot + jnp.sum(acc_b.astype(f32) * c_b)
+            rb = wire.rank_wire_bytes(acc_b.shape[0], N)
+            bytes_rank = bytes_rank + rb
+            bucket_rows.append(rb)
+            sched.submit(wire, payload)
+        ghat = _joined(sched.collect())
+        frame = finish(ghat, e_local, bytes_rank, np.stack(bucket_rows),
+                       acc_sq, c_sq, dot)
+        return ghat, e_local, frame
+
+    sched = _BucketSchedule(cfg.bucket_schedule, coll, mask)
+    e_parts = []
+    for g_b, e_b in zip(_bucketed(g_local, B), _bucketed(e_local, B)):
+        wire = cfg.wire_format(g_b.shape[0], nd)
+        _check_rank_budgets(wire, mask)
+        acc_b = kernel_ref.mul_add(gamma, g_b, e_b)
+        if wire.has_rank_budgets():
+            payload = wire.apply_rank_budget(
+                wire.fused_pack(acc_b, use_pallas=use_pallas), my_idx)
+            c_b = wire.unpack(payload)
+            e_new_b = jnp.where(my_mask > 0, acc_b - c_b,
+                                e_b.astype(jnp.float32))
+        else:
+            payload, c_b, e_new_b = wire.fused_local_step(
+                g_b, e_b, gamma, my_mask, use_pallas=use_pallas, want_c=True)
+        acc_sq = acc_sq + norm_sq(acc_b)
+        c_sq = c_sq + norm_sq(c_b)
+        dot = dot + jnp.sum(acc_b.astype(f32) * c_b)
+        rb = wire.rank_wire_bytes(g_b.shape[0], N)
+        bytes_rank = bytes_rank + rb
+        bucket_rows.append(rb)
+        sched.submit(wire, payload)
+        e_parts.append(e_new_b)
+    ghat = _joined(sched.collect())
+    new_e = _joined(e_parts).astype(jnp.dtype(cfg.ef_dtype))
+    frame = finish(ghat, new_e, bytes_rank, np.stack(bucket_rows),
+                   acc_sq, c_sq, dot)
+    return ghat, new_e, frame

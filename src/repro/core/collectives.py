@@ -273,24 +273,32 @@ class SignWire(WireFormat):
 
     def fused_pack(self, x, use_pallas=None):
         use = kernel_ops.resolve_use_pallas(use_pallas, x.shape[0],
-                                            self._tile())
-        return kernel_ops.sign_pack(x, self.group_size, use_pallas=use)
+                                            self._tile(), op="sign_pack",
+                                            dtype=x.dtype)
+        with jax.named_scope("wire/sign_pack"):
+            return kernel_ops.sign_pack(x, self.group_size, use_pallas=use)
 
     def fused_local_step(self, g, e, gamma, mask_self, use_pallas=None,
                          want_c=True):
         use = kernel_ops.resolve_use_pallas(use_pallas, g.shape[0],
-                                            self._tile())
-        words, scales, c, e_new = kernel_ops.ef_sign_fused(
-            g, e, gamma, mask_self, self.group_size, want_c=want_c,
-            use_pallas=use)
+                                            self._tile(),
+                                            op="ef_sign_fused", dtype=g.dtype)
+        with jax.named_scope("wire/ef_sign_local_step"):
+            words, scales, c, e_new = kernel_ops.ef_sign_fused(
+                g, e, gamma, mask_self, self.group_size, want_c=want_c,
+                use_pallas=use)
         return (words, scales), c, e_new
 
     def decode_reduce(self, payloads, sender_mask, use_pallas=None):
         words, scales = payloads
         use = kernel_ops.resolve_use_pallas(use_pallas, words.shape[1] * 32,
-                                            self._tile())
-        return kernel_ops.sign_decode_reduce(words, scales, sender_mask,
-                                             self.group_size, use_pallas=use)
+                                            self._tile(),
+                                            op="sign_decode_reduce",
+                                            dtype=scales.dtype)
+        with jax.named_scope("wire/sign_decode_reduce"):
+            return kernel_ops.sign_decode_reduce(words, scales, sender_mask,
+                                                 self.group_size,
+                                                 use_pallas=use)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -416,17 +424,21 @@ class SparseWire(WireFormat):
 
     def fused_pack(self, x, use_pallas=None):
         use = kernel_ops.resolve_use_pallas(use_pallas, x.shape[0],
-                                            self._tile())
-        idx, val, scale = kernel_ops.topk_pack(x, self.k_max,
-                                               self.block_size,
-                                               use_pallas=use)
+                                            self._tile(), op="topk_pack",
+                                            dtype=self.value_dtype)
+        with jax.named_scope("wire/topk_pack"):
+            idx, val, scale = kernel_ops.topk_pack(x, self.k_max,
+                                                   self.block_size,
+                                                   use_pallas=use)
         return (idx.astype(self.index_dtype),
                 val.astype(jnp.dtype(self.value_dtype)), scale)
 
     def fused_local_step(self, g, e, gamma, mask_self, use_pallas=None,
                          want_c=True):
         use = kernel_ops.resolve_use_pallas(use_pallas, g.shape[0],
-                                            self._tile())
+                                            self._tile(),
+                                            op="ef_topk_fused",
+                                            dtype=self.value_dtype)
         # The kernels quantize in-register (normalize -> value_dtype ->
         # denormalize), so their c IS the transmitted reconstruction the
         # receivers decode (`values * scale` after value-dtype rounding)
@@ -434,9 +446,10 @@ class SparseWire(WireFormat):
         # which the reference-vs-mesh parity gate demands of the error
         # vector.  No unpack-of-pack scatter here, and want_c=False lets
         # the kernel skip the full-vector c store again.
-        idx, val, scale, c_q, e_new = kernel_ops.ef_topk_fused(
-            g, e, gamma, mask_self, self.k_max, self.block_size,
-            want_c=want_c, value_dtype=self.value_dtype, use_pallas=use)
+        with jax.named_scope("wire/ef_topk_local_step"):
+            idx, val, scale, c_q, e_new = kernel_ops.ef_topk_fused(
+                g, e, gamma, mask_self, self.k_max, self.block_size,
+                want_c=want_c, value_dtype=self.value_dtype, use_pallas=use)
         # val carries value_dtype-rounded numbers in f32: the cast is exact
         payload = (idx.astype(self.index_dtype),
                    val.astype(jnp.dtype(self.value_dtype)), scale)
@@ -445,9 +458,13 @@ class SparseWire(WireFormat):
     def decode_reduce(self, payloads, sender_mask, use_pallas=None):
         idx, val, scales = payloads
         use = kernel_ops.resolve_use_pallas(
-            use_pallas, idx.shape[1] * self.block_size, self._tile())
-        return kernel_ops.topk_decode_reduce(idx, val, scales, sender_mask,
-                                             self.block_size, use_pallas=use)
+            use_pallas, idx.shape[1] * self.block_size, self._tile(),
+            op="topk_decode_reduce", dtype=self.value_dtype)
+        with jax.named_scope("wire/topk_decode_reduce"):
+            return kernel_ops.topk_decode_reduce(idx, val, scales,
+                                                 sender_mask,
+                                                 self.block_size,
+                                                 use_pallas=use)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -583,12 +600,14 @@ class InFlightAggregate:
     def finish(self) -> jnp.ndarray:
         """Decode + mask + reduce the received chunks, run phase 2; returns
         the (n,) aggregate, identical on every coding rank."""
-        chunk_sum = self.wire.decode_reduce(
-            self.recv, self.sender_mask,
-            use_pallas=kernel_ops.backend_use_pallas(self.cfg.backend))
-        for ax in self.cfg.outer_axes:
-            chunk_sum = lax.psum(chunk_sum, ax)
-        return _phase2_gather(chunk_sum, self.cfg)
+        with jax.named_scope("coded/decode_reduce"):
+            chunk_sum = self.wire.decode_reduce(
+                self.recv, self.sender_mask,
+                use_pallas=kernel_ops.backend_use_pallas(self.cfg.backend))
+            for ax in self.cfg.outer_axes:
+                chunk_sum = lax.psum(chunk_sum, ax)
+        with jax.named_scope("coded/phase2_gather"):
+            return _phase2_gather(chunk_sum, self.cfg)
 
 
 def coded_allreduce_start(
@@ -606,11 +625,13 @@ def coded_allreduce_start(
 
     # ---- phase 1: all_to_all compressed chunks over the chunk axis -------
     # generic chunking: every payload leaf's leading dim is proportional to n
-    chunked = tuple(p.reshape((nd, p.shape[0] // nd) + p.shape[1:])
-                    for p in payload)
-    # row i of the result = sender i's chunk destined for this rank
-    recv = tuple(lax.all_to_all(p, cfg.chunk_axis, split_axis=0,
-                                concat_axis=0, tiled=False) for p in chunked)
+    with jax.named_scope("coded/phase1_all_to_all"):
+        chunked = tuple(p.reshape((nd, p.shape[0] // nd) + p.shape[1:])
+                        for p in payload)
+        # row i of the result = sender i's chunk destined for this rank
+        recv = tuple(lax.all_to_all(p, cfg.chunk_axis, split_axis=0,
+                                    concat_axis=0, tiled=False)
+                     for p in chunked)
 
     # sender identity: (outer..., chunk-rank i); this rank's outer coords
     outer_idx = 0

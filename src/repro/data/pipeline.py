@@ -17,6 +17,7 @@ from __future__ import annotations
 import dataclasses
 import queue
 import threading
+import time
 from typing import Iterator, Tuple
 
 import jax
@@ -25,7 +26,7 @@ import numpy as np
 
 __all__ = ["SyntheticLMConfig", "synthetic_lm_batch", "subset_batch_for_rank",
            "coded_train_batch", "coded_batch_stream", "prefetch_to_device",
-           "host_stream"]
+           "PrefetchStats", "host_stream"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -116,8 +117,140 @@ def coded_batch_stream(key: jax.Array, allocation, W, per_subset: int,
         step += 1
 
 
+@dataclasses.dataclass
+class PrefetchStats:
+    """Host-side counters for one `prefetch_to_device` stream.
+
+    Single-writer per field (the worker owns producer-side counters, the
+    consumer thread the rest), so reads are safe snapshots without a lock:
+
+      put_count        batches staged (device_put done, parked in queue)
+      get_count        batches the consumer pulled
+      producer_wait_s  worker time blocked on a FULL queue (consumer is
+                       the bottleneck — prefetch is doing its job)
+      consumer_wait_s  consumer time blocked on an EMPTY queue (host batch
+                       construction is on the critical path — the stall
+                       prefetch exists to remove; ~0 once warmed up)
+      device_put_s     worker time inside the host->device transfer
+      max_depth        high-water queue occupancy (<= size)
+      depth_sum        sum of occupancies seen at each get (mean depth =
+                       depth_sum / get_count)
+    """
+
+    size: int = 0
+    put_count: int = 0
+    get_count: int = 0
+    producer_wait_s: float = 0.0
+    consumer_wait_s: float = 0.0
+    device_put_s: float = 0.0
+    max_depth: int = 0
+    depth_sum: int = 0
+
+    def snapshot(self) -> dict:
+        """Plain-dict copy (the `prefetch` JSONL record's `stats` body)."""
+        return dataclasses.asdict(self)
+
+
+class _DevicePrefetch:
+    """Iterator form of `prefetch_to_device` exposing `.stats`.
+
+    Matches the previous generator's observable behavior exactly: same
+    order/values as mapping device_put over the source, exceptions
+    re-raised at the consumer's next pull, `.close()` (and exhaustion)
+    stops + JOINS the worker."""
+
+    def __init__(self, it: Iterator, size: int, shardings):
+        if size < 1:
+            raise ValueError("prefetch size must be >= 1")
+        self.stats = PrefetchStats(size=size)
+        self._q: "queue.Queue" = queue.Queue(maxsize=size)
+        self._stop = threading.Event()
+        self._sentinel = object()
+        self._err: list = []
+        self._done = False
+        self._it = it
+        self._shardings = shardings
+        self._th = threading.Thread(target=self._worker, daemon=True,
+                                    name="repro-prefetch")
+        self._th.start()
+
+    def _worker(self):
+        q, stop, stats = self._q, self._stop, self.stats
+        try:
+            for item in self._it:
+                t0 = time.perf_counter()
+                item = (jax.device_put(item, self._shardings)
+                        if self._shardings is not None
+                        else jax.device_put(item))
+                stats.device_put_s += time.perf_counter() - t0
+                t0 = time.perf_counter()
+                while not stop.is_set():
+                    try:
+                        q.put(item, timeout=0.1)
+                        stats.put_count += 1
+                        break
+                    except queue.Full:
+                        continue
+                stats.producer_wait_s += time.perf_counter() - t0
+                if stop.is_set():
+                    return
+        except BaseException as exc:   # re-raised on the consumer side
+            self._err.append(exc)
+        finally:
+            while not stop.is_set():
+                try:
+                    q.put(self._sentinel, timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+
+    def __iter__(self) -> "_DevicePrefetch":
+        return self
+
+    def __next__(self):
+        if self._done:
+            raise StopIteration
+        stats = self.stats
+        depth = self._q.qsize()
+        stats.max_depth = max(stats.max_depth, depth)
+        stats.depth_sum += depth
+        t0 = time.perf_counter()
+        item = self._q.get()
+        stats.consumer_wait_s += time.perf_counter() - t0
+        if item is self._sentinel:
+            self._done = True
+            self.close()
+            if self._err:
+                raise self._err[0]
+            raise StopIteration
+        stats.get_count += 1
+        return item
+
+    def close(self) -> None:
+        """Stop + join the worker (idempotent).  Abandoning the stream
+        mid-flight must not leak a blocked thread; a daemon still inside
+        jax.device_put at interpreter exit aborts from XLA's C++
+        teardown, hence the join."""
+        self._done = True
+        self._stop.set()
+        # unblock a worker stuck on q.put, then wait for it to wind down
+        while True:
+            try:
+                self._q.get_nowait()
+            except queue.Empty:
+                break
+        self._th.join(timeout=5.0)
+
+    def __del__(self):
+        try:
+            if not self._done:
+                self.close()
+        except Exception:
+            pass
+
+
 def prefetch_to_device(it: Iterator, size: int = 2,
-                       shardings=None) -> Iterator:
+                       shardings=None) -> _DevicePrefetch:
     """Host -> device prefetcher: a background thread pulls from `it`,
     `jax.device_put`s each item (against `shardings` when given), and
     parks up to `size` device-resident items in a bounded queue.
@@ -129,8 +262,15 @@ def prefetch_to_device(it: Iterator, size: int = 2,
     items are never dropped, so consuming this iterator is
     indistinguishable from mapping device_put over `it`.
 
+    The returned iterator exposes `.stats` (a `PrefetchStats`) counting
+    queue depth and producer/consumer blocked time — `consumer_wait_s`
+    rising above ~0 after warmup is the regression signature of the
+    worker stall the PR 6 perf pass chased (host batch construction back
+    on the step's critical path); `repro.obs.MetricsLogger.log_prefetch`
+    takes `.stats.snapshot()` verbatim.
+
     The worker thread is a daemon and also honors a stop event set when
-    the consumer abandons the iterator (generator close/GC), so partial
+    the consumer abandons the iterator (`.close()`), so partial
     consumption cannot leak a blocked thread; closing the iterator also
     JOINS the worker (a daemon still inside jax.device_put at interpreter
     exit aborts from XLA's C++ teardown).  Exceptions raised by `it` or
@@ -144,58 +284,7 @@ def prefetch_to_device(it: Iterator, size: int = 2,
     spam), so the train loop keeps prefetch OPT-IN (TrainRun.prefetch=0)
     until an accelerator backend lands; single-device streams (no
     collectives) are unaffected."""
-    if size < 1:
-        raise ValueError("prefetch size must be >= 1")
-    q: "queue.Queue" = queue.Queue(maxsize=size)
-    stop = threading.Event()
-    sentinel = object()
-    err: list = []
-
-    def worker():
-        try:
-            for item in it:
-                item = (jax.device_put(item, shardings)
-                        if shardings is not None else jax.device_put(item))
-                while not stop.is_set():
-                    try:
-                        q.put(item, timeout=0.1)
-                        break
-                    except queue.Full:
-                        continue
-                if stop.is_set():
-                    return
-        except BaseException as exc:   # re-raised on the consumer side
-            err.append(exc)
-        finally:
-            while not stop.is_set():
-                try:
-                    q.put(sentinel, timeout=0.1)
-                    break
-                except queue.Full:
-                    continue
-
-    th = threading.Thread(target=worker, daemon=True,
-                          name="repro-prefetch")
-    th.start()
-    try:
-        while True:
-            item = q.get()
-            if item is sentinel:
-                if err:
-                    raise err[0]
-                return
-            yield item
-    finally:
-        stop.set()
-        # unblock a worker stuck on q.put, then wait for it to wind down:
-        # a daemon thread still inside jax.device_put at interpreter exit
-        # aborts the process from XLA's C++ teardown
-        while True:
-            try:
-                q.get_nowait()
-            except queue.Empty:
-                break
-        th.join(timeout=5.0)
+    return _DevicePrefetch(it, size, shardings)
 
 
 def host_stream(cfg: SyntheticLMConfig, start_step: int = 0

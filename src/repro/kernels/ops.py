@@ -42,7 +42,8 @@ def backend_use_pallas(backend: str):
 _fallback_warned = set()
 
 
-def resolve_use_pallas(use_pallas, n: int, tile_elems: int) -> bool:
+def resolve_use_pallas(use_pallas, n: int, tile_elems: int, op: str = "",
+                       dtype=None) -> bool:
     """Concrete kernel choice for a flat length `n`: the tristate
     `use_pallas` (None = Pallas iff on TPU) guarded by the kernel's row
     tile — shapes not divisible by `tile_elems` (G_BLK/R_BLK rows worth of
@@ -50,18 +51,23 @@ def resolve_use_pallas(use_pallas, n: int, tile_elems: int) -> bool:
 
     When Pallas was EXPLICITLY requested (`use_pallas=True`, i.e.
     backend="pallas") and the tile guard rejects the shape, warn once per
-    (n, tile) — a silent fallback here used to make "pallas" benchmark
-    numbers quietly measure the jnp path."""
+    (op, shape, dtype) — a silent fallback here used to make "pallas"
+    benchmark numbers quietly measure the jnp path.  Keying on the shape
+    alone used to swallow the warning when a LATER call hit the same
+    shape through a different op or value dtype (e.g. the f32 sparse wire
+    warned, then the bf16 one fell back silently); callers pass `op` and
+    `dtype` so each distinct dispatch site gets its own warning."""
     use = default_use_pallas() if use_pallas is None else use_pallas
     fits = n % tile_elems == 0
     if use_pallas is True and not fits:
-        key = (n, tile_elems)
+        key = (op, n, tile_elems, str(dtype))
         if key not in _fallback_warned:
             _fallback_warned.add(key)
             warnings.warn(
                 f"backend='pallas' requested but n={n} is not a multiple of "
                 f"the kernel tile ({tile_elems} elements); falling back to "
-                f"the jnp path for this shape (warned once per shape)",
+                f"the jnp path for {op or 'this op'} (warned once per "
+                f"(op, shape, dtype))",
                 RuntimeWarning, stacklevel=3)
     return bool(use) and fits
 

@@ -22,7 +22,7 @@ from repro.configs.common import ArchSpec, ShapeCfg
 from repro.nn import Model
 from repro.sharding import ctx, rules
 
-__all__ = ["ServeSetup", "build_serve_setup"]
+__all__ = ["ServeSetup", "build_serve_setup", "instrument_steps"]
 
 LONG_SEQ = 1 << 19
 
@@ -142,3 +142,38 @@ def build_serve_setup(spec: ArchSpec, mesh: Mesh, shape: ShapeCfg,
                       decode_out_shardings=decode_out_shardings,
                       prefill_out_shardings=prefill_out_shardings,
                       input_specs=input_specs)
+
+
+def instrument_steps(setup: ServeSetup, telemetry) -> Tuple[Any, Any]:
+    """Jitted prefill/decode wrappers feeding a `repro.obs.ServeTelemetry`.
+
+    Returns (prefill, decode) callables with the same signatures as
+    `setup.prefill_step` / `setup.decode_step`; each call BLOCKS on the
+    result (block_until_ready on the first output leaf) and records the
+    wall time as one prefill sample / one decode-token sample, inside a
+    `SpanRecorder` span ("serve/prefill", "serve/decode") so the samples
+    land in the Chrome-trace export too.  The blocking wait is the point:
+    the latency histograms price the step's real device time, not the
+    dispatch.  Use only on measurement paths — a throughput loop should
+    keep the async dispatch of the raw jitted steps."""
+    jprefill = jax.jit(setup.prefill_step,
+                       out_shardings=setup.prefill_out_shardings)
+    jdecode = jax.jit(setup.decode_step,
+                      out_shardings=setup.decode_out_shardings)
+    rec = telemetry.recorder
+
+    def prefill(params, inputs):
+        with rec.span("serve/prefill", tid="serve"):
+            out = jprefill(params, inputs)
+            jax.tree.leaves(out)[0].block_until_ready()
+        telemetry.add_prefill(rec.spans[-1]["t1"] - rec.spans[-1]["t0"])
+        return out
+
+    def decode(params, caches, inputs, pos):
+        with rec.span("serve/decode", tid="serve"):
+            out = jdecode(params, caches, inputs, pos)
+            jax.tree.leaves(out)[0].block_until_ready()
+        telemetry.add_decode_token(rec.spans[-1]["t1"] - rec.spans[-1]["t0"])
+        return out
+
+    return prefill, decode

@@ -37,6 +37,8 @@ from repro.core import coding
 from repro.core.cocoef import (CocoEFConfig, FlatMeta, cocoef_update,
                                flatten_local, padded_size, unflatten_local)
 from repro.nn import Model
+from repro.obs.metrics import (MetricsFrame, frame_out_specs,
+                               reduce_frame_grid)
 from repro.optim import OptimizerConfig, apply_update, init_opt_state, \
     lr_schedule
 from repro.sharding import ctx, rules
@@ -82,6 +84,12 @@ class TrainRun:
     seed: int = 0
     aux_weight: float = 0.01
     param_dtype: Optional[str] = None   # override cfg (e.g. "bfloat16")
+    metrics: bool = False            # in-graph telemetry (repro.obs): the
+    #   train step additionally returns metrics["telemetry"], the reduced
+    #   MetricsFrame (per-rank wire bytes, participation, EF/compression
+    #   norms).  Adds device-local FLOPs only — no host callbacks, no extra
+    #   collectives; False traces the exact pre-telemetry HLO (pinned by
+    #   tests/test_obs.py)
 
     def __post_init__(self):
         # validate at construction: bad straggler / coding knobs used to
@@ -303,28 +311,50 @@ def build_train_setup(spec: ArchSpec, mesh: Mesh, shape: ShapeCfg,
         mask_fn = straggler_proc.mask if straggler_proc is not None else \
             (lambda k, s: jnp.ones((max(n_code, 1),), jnp.float32))
 
-        ghat, e_new = cocoef_update(g_flat, e_loc, None, gamma, cocoef_cfg,
-                                    mask_provider=mask_fn, key=key, step=step)
-        p_new_flat, opt_new = apply_update(run.optimizer, p_flat, ghat,
-                                           opt_loc, step, gamma)
+        if run.metrics:
+            ghat, e_new, frame = cocoef_update(
+                g_flat, e_loc, None, gamma, cocoef_cfg,
+                mask_provider=mask_fn, key=key, step=step, want_metrics=True)
+            p_new_flat, opt_new, onorms = apply_update(
+                run.optimizer, p_flat, ghat, opt_loc, step, gamma,
+                want_norms=True)
+            frame = frame.replace(update_norm_sq=onorms["update_norm_sq"],
+                                  param_norm_sq=onorms["param_norm_sq"])
+        else:
+            ghat, e_new = cocoef_update(g_flat, e_loc, None, gamma,
+                                        cocoef_cfg, mask_provider=mask_fn,
+                                        key=key, step=step)
+            p_new_flat, opt_new = apply_update(run.optimizer, p_flat, ghat,
+                                               opt_loc, step, gamma)
         new_leaves = unflatten_local(p_new_flat, p_meta)
         params_new = jax.tree.unflatten(jax.tree.structure(params), new_leaves)
         gnorm = jnp.sqrt(jnp.sum(ghat * ghat))          # local-slice norm
         shape1 = (1,) * len(mesh_shape)
-        return (params_new, e_new.reshape(shape1 + (flat_pad,)),
-                tuple(o.reshape(shape1 + (flat_pad,)) for o in opt_new),
-                gnorm.reshape(shape1))
+        out = (params_new, e_new.reshape(shape1 + (flat_pad,)),
+               tuple(o.reshape(shape1 + (flat_pad,)) for o in opt_new),
+               gnorm.reshape(shape1))
+        if run.metrics:
+            # the gnorm idiom per leaf: grid-position dims of size 1 so the
+            # replicated frame lands as a (mesh..., leaf)-shaped output
+            out += (jax.tree.map(lambda l: l.reshape(shape1 + l.shape),
+                                 frame),)
+        return out
 
     grads_in_specs = gspecs
     params_in_specs = pspecs
     opt_specs = tuple(state_spec for _ in range(n_opt))
 
+    out_specs = (params_in_specs, state_spec, opt_specs,
+                 P(*mesh.axis_names))
+    if run.metrics:
+        frame_abs = MetricsFrame.abstract(max(n_code, 1), run.num_buckets)
+        out_specs += (frame_out_specs(frame_abs, mesh.axis_names),)
+
     agg = compat.shard_map(
         agg_body, mesh,
         in_specs=(params_in_specs, grads_in_specs, state_spec, opt_specs,
                   P(), P()),
-        out_specs=(params_in_specs, state_spec, opt_specs,
-                   P(*mesh.axis_names)),
+        out_specs=out_specs,
         axis_names=all_axes, check=False)
 
     # =======================================================================
@@ -371,9 +401,18 @@ def build_train_setup(spec: ArchSpec, mesh: Mesh, shape: ShapeCfg,
         grads = jax.tree.map(
             lambda x, s: jax.lax.with_sharding_constraint(
                 x, NamedSharding(mesh, s)), grads, gspecs)
-        params_new, e_new, opt_new, gnorm = agg(params, grads, e, opt, step,
-                                                key)
+        if run.metrics:
+            params_new, e_new, opt_new, gnorm, frame_grid = agg(
+                params, grads, e, opt, step, key)
+        else:
+            params_new, e_new, opt_new, gnorm = agg(params, grads, e, opt,
+                                                    step, key)
         metrics = {"loss": losses.mean(), "gnorm_local": gnorm.max()}
+        if run.metrics:
+            # grid-replicated frame -> per-coding-rank / global step
+            # telemetry; runs outside the shard_map, adds no collectives
+            metrics["telemetry"] = reduce_frame_grid(
+                frame_grid, mesh.axis_names, coding_axes)
         return params_new, e_new, opt_new, metrics
 
     # ---- specs / init ------------------------------------------------------

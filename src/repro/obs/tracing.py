@@ -1,0 +1,73 @@
+"""Span tracing: in-graph named scopes + host wall-clock span timers.
+
+Two complementary planes:
+
+  * Device plane — `scope(name)` is `jax.named_scope`: zero-cost HLO op
+    metadata so profiler dumps (and `jax.profiler.trace`) show the
+    pack / all_to_all / decode-reduce / optimizer phases of the coded
+    step.  The scopes are applied unconditionally on the hot path — they
+    change op *names* only, never the computation.
+
+  * Host plane — `SpanRecorder` measures the phases jit cannot see:
+    batch wait, prefetch queue occupancy, device put, step dispatch, the
+    blocking result fetch.  Each `span()` also enters a
+    `jax.profiler.TraceAnnotation` so host spans line up with device
+    traces when the profiler is on.  Spans render to Chrome-trace JSON
+    via `repro.obs.trace_export.chrome_trace`.
+"""
+from __future__ import annotations
+
+import contextlib
+import time
+from typing import Dict, List, Optional
+
+import jax
+
+__all__ = ["scope", "SpanRecorder"]
+
+# in-graph phase annotation (op-metadata only; safe inside jit/shard_map)
+scope = jax.named_scope
+
+
+class SpanRecorder:
+    """Wall-clock host spans + counter samples for one run.
+
+    spans:    [{"name", "tid", "t0", "t1", "args"}] seconds since `t0_s`
+    counters: [{"name", "t", "value"}] point samples (queue depth etc.)
+    """
+
+    def __init__(self):
+        self.t0_s = time.perf_counter()
+        self.spans: List[dict] = []
+        self.counters: List[dict] = []
+
+    def now(self) -> float:
+        return time.perf_counter() - self.t0_s
+
+    @contextlib.contextmanager
+    def span(self, name: str, tid: str = "host", **args):
+        """Time a host-side phase; also a profiler TraceAnnotation."""
+        t0 = self.now()
+        with jax.profiler.TraceAnnotation(name):
+            try:
+                yield
+            finally:
+                self.spans.append({"name": name, "tid": tid, "t0": t0,
+                                   "t1": self.now(),
+                                   "args": {k: v for k, v in args.items()}})
+
+    def counter(self, name: str, value: float) -> None:
+        self.counters.append({"name": name, "t": self.now(),
+                              "value": float(value)})
+
+    def durations(self, name: Optional[str] = None) -> List[float]:
+        """Span durations in seconds (optionally for one span name)."""
+        return [s["t1"] - s["t0"] for s in self.spans
+                if name is None or s["name"] == name]
+
+    def summary_s(self) -> Dict[str, float]:
+        """Total seconds per span name (the per-step host-phase budget)."""
+        out: Dict[str, float] = {}
+        for s in self.spans:
+            out[s["name"]] = out.get(s["name"], 0.0) + (s["t1"] - s["t0"])
+        return out

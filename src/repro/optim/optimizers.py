@@ -37,15 +37,8 @@ def init_opt_state(cfg: OptimizerConfig, n: int):
     raise ValueError(cfg.kind)
 
 
-def apply_update(cfg: OptimizerConfig, params_flat, ghat, state, step,
-                 gamma):
-    """params_flat: (n,) f32 local; ghat: aggregated update (incl. gamma).
-    Returns (new_params, new_state).
-
-    Weight decay is DECOUPLED (AdamW): the decay term
-    `weight_decay * gamma * params` is subtracted at the parameter update
-    only and never enters the gradient estimate, so the momentum buffer and
-    Adam's moments m/v are identical with and without decay."""
+def _apply_update_impl(cfg: OptimizerConfig, params_flat, ghat, state, step,
+                       gamma):
     decay = (cfg.weight_decay * gamma * params_flat if cfg.weight_decay
              else 0.0)
     if cfg.kind == "sgd":
@@ -65,6 +58,30 @@ def apply_update(cfg: OptimizerConfig, params_flat, ghat, state, step,
         return (params_flat - gamma * mh / (jnp.sqrt(vh) + cfg.eps) - decay,
                 (m, v))
     raise ValueError(cfg.kind)
+
+
+def apply_update(cfg: OptimizerConfig, params_flat, ghat, state, step,
+                 gamma, want_norms: bool = False):
+    """params_flat: (n,) f32 local; ghat: aggregated update (incl. gamma).
+    Returns (new_params, new_state) — with `want_norms=True`, additionally
+    a third dict {"update_norm_sq", "param_norm_sq"} of device-local sums
+    of squares (|theta_new - theta|^2 including the decoupled decay, and
+    |theta_new|^2) filling the telemetry `MetricsFrame`'s optimizer
+    fields; the default path traces the update exactly as before.
+
+    Weight decay is DECOUPLED (AdamW): the decay term
+    `weight_decay * gamma * params` is subtracted at the parameter update
+    only and never enters the gradient estimate, so the momentum buffer and
+    Adam's moments m/v are identical with and without decay."""
+    with jax.named_scope("optim/apply_update"):
+        new_params, new_state = _apply_update_impl(cfg, params_flat, ghat,
+                                                   state, step, gamma)
+        if not want_norms:
+            return new_params, new_state
+        delta = new_params - params_flat
+        norms = {"update_norm_sq": jnp.sum(delta * delta),
+                 "param_norm_sq": jnp.sum(new_params * new_params)}
+        return new_params, new_state, norms
 
 
 SCHEDULES = ("constant", "rsqrt", "cosine")

@@ -95,6 +95,42 @@ def test_prefetch_size_validation():
         next(pipeline.prefetch_to_device(iter([]), size=0))
 
 
+def test_prefetch_stall_counters_name_the_bottleneck():
+    """PR 6 regression guard: a stalled prefetch worker used to be
+    invisible — steps just ran slower.  The stats now name the bottleneck
+    side: a slow PRODUCER accumulates consumer_wait_s (the step blocked on
+    an empty queue — the stall prefetch exists to remove), a slow CONSUMER
+    accumulates producer_wait_s with the queue at its high-water mark."""
+    def slow_gen(n, delay):
+        for i in range(n):
+            time.sleep(delay)
+            yield np.full((2,), i, np.float32)
+
+    # producer-bound: the consumer drains faster than the worker produces
+    it = pipeline.prefetch_to_device(slow_gen(5, 0.05), size=2)
+    assert len(list(it)) == 5
+    s = it.stats.snapshot()
+    assert s["put_count"] == 5 and s["get_count"] == 5
+    assert s["consumer_wait_s"] >= 0.1          # ~5 x 50ms empty-queue waits
+    assert s["device_put_s"] >= 0.0
+    assert _no_prefetch_threads()
+
+    # consumer-bound: instant producer, slow consumer -> full queue
+    it = pipeline.prefetch_to_device(
+        (np.full((2,), i, np.float32) for i in range(6)), size=2)
+    time.sleep(0.3)                 # worker fills the queue, then blocks
+    got = []
+    for x in it:
+        got.append(x)
+        time.sleep(0.05)
+    s = it.stats.snapshot()
+    assert len(got) == 6
+    assert s["max_depth"] == 2                  # queue ran at capacity
+    assert s["producer_wait_s"] >= 0.1          # worker blocked on q.put
+    assert s["depth_sum"] >= s["get_count"]     # consumer mostly found depth
+    assert _no_prefetch_threads()
+
+
 def test_coded_batch_stream_matches_per_step_batches():
     """The stream at any start_step yields exactly coded_train_batch(t):
     prefetching is a pure reordering of WHEN batches are built."""
