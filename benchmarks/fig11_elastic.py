@@ -1,0 +1,299 @@
+"""Fig. 11 (beyond-paper): the elastic coding plane under estimated rates
+and mid-run membership changes.
+
+Fig. 9 established that rate-aware encode weights need the per-rank
+participation rates q_i — but it fed them from the ORACLE
+(`StragglerProcess.rates()`), which no production system has.  This sweep
+closes the loop the way `launch.train --elastic` does: a bias-corrected
+online `RateEstimator` learns q_i from the observed masks and a
+`CodingPlan` refits the encode weights every step, re-running the greedy
+`rate_aware_allocation` only when the estimates drift past the replan
+threshold.  Three methods, identical wire payloads:
+
+  oracle      rate-aware weights + allocation from the true q_i (fig9's
+              best case — the ceiling)
+  estimated   the live plane: weights from the online estimate, replans
+              on drift (what a real deployment can actually run)
+  mean_rate   eq. 3 weights from the scalar mean rate (the floor)
+
+Halfway through every run the fleet SHRINKS to 3N/4 ranks: the error
+vectors of the survivors ride `checkpoint.elastic_rescale_ef`, the subset
+count M stays fixed, every method replans its allocation for the new
+fleet, and the estimated method additionally carries the survivors' rate
+statistics through `RateEstimator.resize`.  The acceptance criterion is
+that the estimated curve's time-to-target stays close to the oracle's
+(~10%) and the membership change does not reset the loss curve.
+
+Emits results/repro/fig11.json.  `--perf-floor` additionally times the
+1024-rank fleet hot paths (allocation + mask sampling + StepTimer) against
+a wall-clock budget and exits non-zero on violation (the CI elastic-smoke
+job runs both).
+
+  PYTHONPATH=src python benchmarks/fig11_elastic.py [--smoke] [--perf-floor]
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.checkpoint import elastic_rescale_ef
+from repro.core import coding, compression as C, error_feedback as EF
+from repro.core.coding_state import CodingPlan, RateEstimator, maybe_replan
+from repro.core.collectives import SignWire
+from repro.sim import (DEFAULT_COMPUTE, DEFAULT_LINK, HeterogeneousRates,
+                       MarkovBursty, StepTimer, TraceReplay)
+
+try:
+    from . import _repro_common as R
+except ImportError:                      # run as a script
+    import _repro_common as R
+
+OUT = None                # optional override; default R.results_dir()
+
+N_WIRE = 1 << 22          # production wire scale (ROADMAP comm table)
+
+METHODS = ("oracle", "estimated", "mean_rate")
+
+P_SLOW, P_FAST, SLOW_FRACTION = 0.8, 0.02, 0.3
+
+PERF_N, PERF_MASKS = 1024, 1000          # the 1000-rank fleet floor
+PERF_BUDGET_S = 30.0
+
+
+def _phase_processes(N, N2, smoke=False):
+    """(phase-1 process at N ranks, phase-2 process at N2 ranks) per
+    straggler family.  Phase 2 keeps each family's structure on the
+    surviving ranks: hetero keeps the survivors' p_i, markov restarts the
+    chain on the smaller fleet, trace replays the survivors' columns."""
+    two = HeterogeneousRates.two_class(N, p_slow=P_SLOW, p_fast=P_FAST,
+                                       slow_fraction=SLOW_FRACTION)
+    rows = np.array(two.sample_trace(jax.random.PRNGKey(99),
+                                     24 if smoke else 64))
+    burst = 4.0 if smoke else 8.0
+    return {
+        "hetero": (two, HeterogeneousRates(num_devices=N2,
+                                           p_ranks=two.p_ranks[:N2])),
+        "markov": (MarkovBursty(num_devices=N, p=0.2, mean_burst=burst),
+                   MarkovBursty(num_devices=N2, p=0.2, mean_burst=burst)),
+        "trace": (TraceReplay.from_array(rows),
+                  TraceReplay.from_array(rows[:, :N2])),
+    }
+
+
+def _mean_p(proc) -> float:
+    return float(1.0 - np.asarray(proc.rates()).mean())
+
+
+def _plan_for(method, proc, M, d, p_bar, est=None):
+    """(W provider, per-phase static W or live plan) for one method."""
+    rates = np.asarray(proc.rates())
+    if method == "oracle":
+        alloc = coding.rate_aware_allocation(rates, M, d)
+        return coding.encode_weights(alloc, rates=rates), None
+    if method == "mean_rate":
+        alloc = coding.rate_aware_allocation(
+            np.full((proc.num_devices,), 1.0 - p_bar), M, d)
+        return coding.encode_weights(alloc, p_bar), None
+    # estimated: the planner starts from the uniform mean-rate guess (all
+    # a fresh deployment knows) and learns the rest online
+    plan = CodingPlan.create(np.full((proc.num_devices,), 1.0 - p_bar),
+                             M, d)
+    return None, plan
+
+
+def _run_elastic_trial(method, procs, T, T1, M, d, gamma, seed,
+                       record_every, timer):
+    """One trial of one method through the membership change.  Returns a
+    history dict with time_s attached (phase timelines concatenated) and
+    replan diagnostics."""
+    proc_a, proc_b = procs
+    N, N2 = proc_a.num_devices, proc_b.num_devices
+    p_bar = _mean_p(proc_a)
+    grad_fn, loss_fn, theta0, _ = R.tasks.linreg_task(
+        seed=seed, num_subsets=M, dim=M // 2)
+    trace_a = np.asarray(proc_a.sample_trace(jax.random.PRNGKey(1000 + seed),
+                                             T1), np.float32)
+    trace_b = np.asarray(proc_b.sample_trace(jax.random.PRNGKey(5000 + seed),
+                                             T - T1), np.float32)
+    times = np.concatenate([timer.steps(trace_a)[0], timer.steps(trace_b)[0]])
+    cum = np.cumsum(times)
+
+    est = RateEstimator(N) if method == "estimated" else None
+    W, plan = _plan_for(method, proc_a, M, d, p_bar, est)
+    comp = C.GroupedSign()
+    st = EF.EFState.init(theta0, N)
+    hist = {"step": [], "loss": [], "time_s": []}
+    replans = 0
+
+    def record(t):
+        hist["step"].append(t)
+        hist["loss"].append(float(loss_fn(st.theta)))
+        hist["time_s"].append(float(cum[t]))
+
+    for t in range(T):
+        if t == T1:
+            # ---- membership change: N -> N2, M fixed -------------------
+            e2 = np.asarray(elastic_rescale_ef(
+                np.asarray(st.e)[:, None, :], (N, 1), (N2, 1),
+                st.e.shape[-1]))[:, 0]
+            st = EF.EFState(theta=st.theta, e=jax.numpy.asarray(e2))
+            if method == "estimated":
+                est.resize(N2)            # survivors keep their statistics
+                plan.resize(est.rates, M)
+                replans += 1
+            else:
+                W, _ = _plan_for(method, proc_b, M, d, p_bar)
+        mask = (trace_a[t] if t < T1 else trace_b[t - T1])
+        if method == "estimated":
+            state, info = maybe_replan(
+                plan, est.rates if est.steps_seen.any() else None)
+            replans += int(info["reallocated"])
+            W = np.asarray(state.W)
+        st = EF.cocoef_step(st, grad_fn, W, mask, gamma, comp, step=t)
+        if method == "estimated":
+            est.update(mask)
+        if t % record_every == 0 or t == T - 1:
+            record(t)
+    hist["replans"] = replans
+    return hist
+
+
+def run(trials=3, T=400, N=64, gamma=2e-5, record_every=20, d=3,
+        n_wire=N_WIRE, link=DEFAULT_LINK, compute=DEFAULT_COMPUTE,
+        smoke=False, out_dir=None):
+    if smoke:
+        trials, T, N, record_every, gamma = 1, 120, 16, 5, 1e-4
+    N2 = 3 * N // 4
+    M, T1 = N, T // 2
+    wire = SignWire(group_size=512)
+    timer = StepTimer(wire=wire, n=n_wire, link=link, compute=compute)
+    res = {"meta": {**R.run_metadata(), "n_wire": n_wire, "trials": trials,
+                    "T": T, "N": N, "N_after": N2, "resize_step": T1,
+                    "M": M, "d": d, "gamma": gamma,
+                    "two_class": {"p_slow": P_SLOW, "p_fast": P_FAST,
+                                  "slow_fraction": SLOW_FRACTION},
+                    "link": dataclasses.asdict(link),
+                    "compute": dataclasses.asdict(compute)},
+           "curves": {}, "summary": {}}
+
+    for pname, procs in _phase_processes(N, N2, smoke=smoke).items():
+        curves, replans = {}, {}
+        for mname in METHODS:
+            per_trial = [
+                _run_elastic_trial(mname, procs, T, T1, M, d, gamma, s,
+                                   record_every, timer)
+                for s in range(trials)]
+            replans[mname] = float(np.mean([h.pop("replans")
+                                            for h in per_trial]))
+            curves[mname] = R.summarize_trials(
+                per_trial, keys=("loss", "time_s"))
+        target, t2t = R.target_and_t2t(curves)
+        # loss continuity through the resize: the recorded losses straddling
+        # step T1 must not blow back up toward the start
+        steps = np.asarray(curves["estimated"]["step"])
+        loss = np.asarray(curves["estimated"]["loss"])
+        pre = loss[steps < T1][-1]
+        post = loss[steps >= T1][0]
+        summary = {"target_loss": target, "time_to_target_s": t2t,
+                   "mean_replans": replans,
+                   "final_loss": {m: c["loss"][-1]
+                                  for m, c in curves.items()},
+                   "resize_loss_pre": float(pre),
+                   "resize_loss_post": float(post),
+                   "resize_continuous": bool(
+                       post < loss[0] and post < 2.0 * max(pre, target))}
+        if t2t["estimated"] and t2t["oracle"]:
+            summary["estimated_vs_oracle_slowdown"] = \
+                t2t["estimated"] / t2t["oracle"]
+        res["curves"][pname] = curves
+        res["summary"][pname] = summary
+
+    out = Path(out_dir) if out_dir else (OUT or R.results_dir())
+    out.mkdir(parents=True, exist_ok=True)
+    (out / "fig11.json").write_text(json.dumps(res, indent=1))
+    return res
+
+
+def run_perf_floor(budget_s=PERF_BUDGET_S):
+    """The 1000-rank fleet floor: allocation + mask sampling + StepTimer
+    must stay interactive (the elastic plane runs these on the host every
+    replan / every step).  Returns the timings; asserts the budget."""
+    N, T = PERF_N, PERF_MASKS
+    rng = np.random.default_rng(0)
+    rates = np.clip(rng.uniform(0.3, 0.99, N), 0.0, 0.99)
+    t0 = time.perf_counter()
+    alloc = coding.rate_aware_allocation(rates, N, 3)
+    t_alloc = time.perf_counter() - t0
+
+    proc = HeterogeneousRates.linear(N, 0.2)
+    t0 = time.perf_counter()
+    trace = np.asarray(proc.sample_trace(jax.random.PRNGKey(0), T))
+    t_masks = time.perf_counter() - t0
+
+    timer = StepTimer(wire=SignWire(group_size=512), n=N_WIRE)
+    t0 = time.perf_counter()
+    times, _, _ = timer.steps(trace)
+    t_timer = time.perf_counter() - t0
+
+    est = RateEstimator(N)
+    t0 = time.perf_counter()
+    for t in range(T):
+        est.update(trace[t])
+    t_est = time.perf_counter() - t0
+
+    total = t_alloc + t_masks + t_timer + t_est
+    out = {"N": N, "masks": T, "budget_s": budget_s,
+           "alloc_s": t_alloc, "mask_sample_s": t_masks,
+           "steptimer_s": t_timer, "estimator_s": t_est, "total_s": total,
+           "alloc_replicas": int(np.asarray(alloc.S).sum()),
+           "mean_step_s": float(times.mean())}
+    print(f"perf floor (N={N}): alloc={t_alloc:.2f}s "
+          f"masks={t_masks:.2f}s timer={t_timer:.2f}s "
+          f"estimator={t_est:.2f}s total={total:.2f}s "
+          f"(budget {budget_s:.0f}s)")
+    if total > budget_s:
+        raise SystemExit(f"perf floor VIOLATED: {total:.2f}s > "
+                         f"{budget_s:.0f}s for the {N}-rank fleet")
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny configuration for CI (1 trial, 120 steps, "
+                         "16 ranks)")
+    ap.add_argument("--perf-floor", action="store_true",
+                    help="also time the 1024-rank fleet hot paths against "
+                         "a wall-clock budget (non-zero exit on violation)")
+    ap.add_argument("--trials", type=int, default=3)
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--out", default=None,
+                    help="output directory (default: $REPRO_RESULTS_DIR "
+                         "or results/repro)")
+    args = ap.parse_args()
+    perf = run_perf_floor() if args.perf_floor else None
+    res = run(trials=args.trials, T=args.steps, smoke=args.smoke,
+              out_dir=args.out)
+    if perf is not None:
+        out = Path(args.out) if args.out else (OUT or R.results_dir())
+        res["meta"]["perf_floor"] = perf
+        (out / "fig11.json").write_text(json.dumps(res, indent=1))
+    for pname, s in res["summary"].items():
+        t2t = ", ".join(
+            f"{m}={v:.2f}s" if v is not None else f"{m}=never"
+            for m, v in s["time_to_target_s"].items())
+        slow = s.get("estimated_vs_oracle_slowdown")
+        print(f"{pname:8s} target={s['target_loss']:.1f}  {t2t}"
+              + (f"  estimated/oracle x{slow:.2f}" if slow else "")
+              + f"  replans={s['mean_replans']}"
+              + f"  resize {'ok' if s['resize_continuous'] else 'RESET'}")
+    sys.exit(0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,41 +1,119 @@
-"""Elastic scaling demo: train on N coding ranks, checkpoint, resume on a
-DIFFERENT device count.  The pairwise-balanced allocation is regenerated,
-surviving ranks keep their error vectors, new ranks start at e=0
-(convergence is preserved — Theorem 1 holds for any e^0 = 0 subset).
+"""Elastic scaling demo on the PRODUCTION path: train the transformer LM
+through the mesh `cocoef_update` step on 4 coding ranks, checkpoint, then
+resume on a SHRUNK mesh with 2 coding ranks.
+
+Everything goes through the real pipeline — `build_train_setup`, the wire
+compressor (`WireFormat`), the two-stage shard_map aggregation — not the
+(N, D) reference EF loop.  Across the resize:
+
+  * params restore against the NEW mesh's shardings (global shapes are
+    mesh-independent),
+  * the per-rank error vectors and optimizer state map through
+    `checkpoint.elastic_rescale_ef`: surviving coding ranks keep their
+    error, vanished ranks drop, the flat tail truncates/pads to the new
+    local size (Theorem 1 is invariant to e_i^0 = 0 re-initialization),
+  * the elastic coding plane resizes: `RateEstimator.resize` carries the
+    survivors' rate statistics, and the fresh setup's `CodingPlan` plans
+    the new fleet's allocation.
 
   PYTHONPATH=src python examples/elastic_restart.py
 """
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import elastic_rescale_ef
-from repro.core import coding, compression as C, error_feedback as EF
-from repro.data.tasks import linreg_task
+from repro.checkpoint import (elastic_rescale_ef, restore_checkpoint,
+                              save_checkpoint)
+from repro.compat import make_mesh
+from repro.configs import REGISTRY
+from repro.configs.common import ShapeCfg
+from repro.core.coding_state import RateEstimator
+from repro.launch.train import (TrainRun, build_train_setup,
+                                elastic_coding_state, make_batch_for_step)
 
-grad_fn, loss_fn, theta0, _ = linreg_task(seed=0)
-key = jax.random.PRNGKey(42)
+CKPT = "/tmp/repro_elastic_restart"
+STEPS_1, STEPS_2 = 10, 10
 
-# phase 1: 100 devices
-N1 = 100
-alloc1 = coding.random_allocation(0, N1, 100, d=5)
-W1 = coding.encode_weights(alloc1, p=0.2)
-st = EF.EFState.init(theta0, N1)
-for t in range(150):
-    mask = coding.straggler_mask(key, t, N1, 0.2)
-    st = EF.cocoef_step(st, grad_fn, W1, mask, 1e-5, C.GroupedSign(), step=t)
-print(f"[N=100] step 150 loss = {float(loss_fn(st.theta)):.1f}")
 
-# cluster shrinks to 60 devices: regenerate allocation, carry EF for the
-# surviving ranks (first 60), drop the rest
-N2 = 60
-alloc2 = coding.random_allocation(1, N2, 100, d=5)
-W2 = coding.encode_weights(alloc2, p=0.2)
-e2 = np.asarray(elastic_rescale_ef(np.asarray(st.e)[:, None, :],
-                                   (N1, 1), (N2, 1), st.e.shape[-1]))[:, 0]
-st = EF.EFState(theta=st.theta, e=jnp.asarray(e2))
-for t in range(150, 400):
-    mask = coding.straggler_mask(key, t, N2, 0.2)
-    st = EF.cocoef_step(st, grad_fn, W2, mask, 1e-5, C.GroupedSign(), step=t)
-print(f"[N=60 ] step 400 loss = {float(loss_fn(st.theta)):.1f}  "
-      f"(training continued through the resize)")
+def build(mesh_shape):
+    mesh = make_mesh(mesh_shape, ("pod", "data", "model"))
+    shape = ShapeCfg("train", seq_len=64, global_batch=16)
+    spec = REGISTRY["olmoe-1b-7b"]
+    spec = dataclasses.replace(spec, coding=dataclasses.replace(
+        spec.coding, group_size=32, block_size=64, k_per_block=8,
+        straggler_p=0.25))
+    run = TrainRun(base_lr=5e-3, mode="cocoef", compressor="sign",
+                   straggler="hetero", elastic=True)
+    return build_train_setup(spec, mesh, shape, run, smoke=True), spec, shape
+
+
+def train(setup, spec, shape, params, e, opt, estimator, start, steps, key):
+    jstep = jax.jit(setup.train_step, donate_argnums=(6,))
+    state, _ = elastic_coding_state(setup, estimator.rates
+                                    if estimator.steps_seen.any() else None)
+    proc = setup.straggler_process
+    loss = None
+    for t in range(start, start + steps):
+        batch = jax.device_put(
+            make_batch_for_step(setup, spec, shape, key, t, smoke=True),
+            setup.batch_shardings)
+        params, e, opt, m = jstep(params, e, opt, batch, jnp.int32(t), key,
+                                  state)
+        estimator.update(np.asarray(proc.mask(key, t)))
+        state, info = elastic_coding_state(setup, estimator.rates)
+        loss = float(m["loss"])
+        tag = f" (replan -> epoch {info['epoch']})" if info["reallocated"] \
+            else ""
+        print(f"  step {t:3d} loss={loss:.4f}{tag}")
+    return params, e, opt, loss
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+
+    # ---- phase 1: full mesh (2, 2, 2) -> 4 coding ranks -------------------
+    setup1, spec, shape = build((2, 2, 2))
+    print(f"[phase 1] mesh (2,2,2): n_code={setup1.n_code} "
+          f"local flat={setup1.flat_pad}")
+    params, e, opt = setup1.init_state(key)
+    est = RateEstimator(setup1.n_code)
+    params, e, opt, loss1 = train(setup1, spec, shape, params, e, opt, est,
+                                  0, STEPS_1, key)
+    save_checkpoint(CKPT, STEPS_1, {"params": params, "e": e, "opt": opt})
+    print(f"[phase 1] checkpointed at step {STEPS_1}, loss={loss1:.4f}")
+
+    # ---- phase 2: cluster shrinks to (1, 2, 2) -> 2 coding ranks ----------
+    setup2, spec, shape = build((1, 2, 2))
+    print(f"[phase 2] mesh (1,2,2): n_code={setup2.n_code} "
+          f"local flat={setup2.flat_pad}")
+    p2, e2, o2 = setup2.init_state(key)          # templates for restore
+    start, st = restore_checkpoint(
+        CKPT, {"params": p2, "e": e, "opt": opt},
+        shardings={"params": setup2.param_shardings})
+    params = st["params"]
+    # EF + optimizer state ride elastic_rescale_ef: coding ranks present in
+    # both grids keep their slices, the rest start from zero
+    mesh1, mesh2 = (2, 2, 2), (1, 2, 2)
+    e = jax.device_put(
+        jnp.asarray(elastic_rescale_ef(np.asarray(st["e"]), mesh1, mesh2,
+                                       setup2.flat_pad),
+                    e2.dtype), setup2.state_sharding)
+    opt = tuple(jax.device_put(
+        jnp.asarray(elastic_rescale_ef(np.asarray(o), mesh1, mesh2,
+                                       setup2.flat_pad), jnp.float32),
+        setup2.state_sharding) for o in st["opt"])
+    est.resize(setup2.n_code)                    # survivors keep statistics
+    params, e, opt, loss2 = train(setup2, spec, shape, params, e, opt, est,
+                                  start, STEPS_2, key)
+    print(f"[phase 2] step {start + STEPS_2} loss={loss2:.4f}  "
+          f"(training continued through the resize; "
+          f"phase-1 final loss was {loss1:.4f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -16,11 +16,13 @@ from pathlib import Path
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
 from repro.configs import REGISTRY
 from repro.configs.common import ShapeCfg
-from repro.launch.train import TrainRun, batch_stream, build_train_setup
+from repro.launch.train import (TrainRun, batch_stream, build_train_setup,
+                                elastic_coding_state)
 
 
 def main():
@@ -69,6 +71,16 @@ def main():
     ap.add_argument("--straggler-trace", default=None,
                     help="recorded-mask JSON for --straggler trace "
                          "(default: synthesize a bursty trace and save it)")
+    ap.add_argument("--elastic", action="store_true",
+                    help="dynamic coding plane: a live CodingState (rate "
+                         "estimates + encode weights) rides the jitted "
+                         "step as a donated argument; masks observed on "
+                         "the host feed an online RateEstimator, drift "
+                         "past --replan-threshold regenerates the "
+                         "allocation mid-run (epoch bump, no retrace)")
+    ap.add_argument("--replan-threshold", type=float, default=0.1,
+                    help="elastic: max |q_est - q_planned| tolerated "
+                         "before rate_aware_allocation is re-run")
     ap.add_argument("--mean-rate-coding", action="store_true",
                     help="encode weights from the scalar mean rate p "
                          "(paper eq. 3) instead of the per-rank rates "
@@ -141,6 +153,8 @@ def main():
                        straggler_trace=trace_path,
                        rate_aware=not args.mean_rate_coding,
                        k_budgets=k_budgets,
+                       elastic=args.elastic,
+                       replan_threshold=args.replan_threshold,
                        metrics=args.metrics)
         setup = build_train_setup(spec, mesh, shape, run, smoke=True)
     except ValueError as e:        # bad straggler/coding knobs fail HERE,
@@ -151,6 +165,15 @@ def main():
           f"per-rank batch={setup.b_loc} local flat={setup.flat_pad} "
           f"straggler={type(proc).__name__ if proc else 'none'} "
           f"coding={'rate-aware q_i' if rates is not None else 'mean-rate p'}")
+
+    estimator = state = None
+    if args.elastic:
+        from repro.core.coding_state import RateEstimator
+        estimator = RateEstimator(setup.n_code)
+        state, _ = elastic_coding_state(setup)   # epoch 0: planned rates
+        print(f"elastic coding plane: replan threshold "
+              f"{args.replan_threshold}, epoch 0 rates "
+              f"{[round(float(x), 3) for x in state.rates_estimate]}")
 
     key = jax.random.PRNGKey(0)
     params, e, opt = setup.init_state(key)
@@ -184,17 +207,21 @@ def main():
                                run_metadata=meta)
         rec = SpanRecorder()
 
-    jstep = jax.jit(setup.train_step)
+    # elastic: coding_state is donated — every leaf is echoed through the
+    # metrics dict, so XLA aliases the buffers for the next step's state
+    jstep = jax.jit(setup.train_step, donate_argnums=(6,)) \
+        if args.elastic else jax.jit(setup.train_step)
     # batches arrive device-resident, staged --prefetch steps ahead by the
     # background prefetcher while the mesh runs the current step
     batches = batch_stream(setup, spec, shape, key, start_step=start,
                            smoke=True, prefetch=run.prefetch)
     try:
         for t in range(start, args.steps):
+            extra = (state,) if args.elastic else ()
             if rec is None:
                 batch = next(batches)
                 params, e, opt, m = jstep(params, e, opt, batch,
-                                          jnp.int32(t), key)
+                                          jnp.int32(t), key, *extra)
             else:
                 with rec.span("train/batch_wait", step=t):
                     batch = next(batches)
@@ -202,7 +229,7 @@ def main():
                     rec.counter("prefetch_depth", batches.stats.max_depth)
                 with rec.span("train/step_dispatch", step=t):
                     params, e, opt, m = jstep(params, e, opt, batch,
-                                              jnp.int32(t), key)
+                                              jnp.int32(t), key, *extra)
                 with rec.span("train/result_fetch", step=t):
                     tel = frame_to_host(jax.device_get(m["telemetry"]))
                     loss = float(m["loss"])
@@ -210,6 +237,19 @@ def main():
                           for s in rec.spans[-3:]}
                 logger.log_step(t, tel, loss=loss, spans=span_s)
                 masks.append(tel["participation"])
+            if args.elastic:
+                # feed the plane: the mask the step just used is pure in
+                # (key, t), so the host can observe it without telemetry
+                obs = tel["participation"] if rec is not None else (
+                    np.asarray(proc.mask(key, t)) if proc is not None
+                    else np.ones((setup.n_code,)))
+                estimator.update(obs)
+                state, info = elastic_coding_state(setup, estimator.rates)
+                if logger is not None:
+                    logger.log_replan(t, info)
+                if info["reallocated"]:
+                    print(f"  replan @ step {t}: drift={info['drift']:.3f}"
+                          f" -> allocation epoch {info['epoch']}")
             if t % 10 == 0 or t == args.steps - 1:
                 print(f"step {t:4d} loss={float(m['loss']):.4f}")
             if (t + 1) % args.ckpt_every == 0:
@@ -225,7 +265,6 @@ def main():
         # Chrome trace: measured host spans (pid 0) + the StepTimer
         # PREDICTION for the same observed masks (pid 1) — open both in
         # chrome://tracing and compare lane by lane
-        import numpy as np
         from repro.obs import span_events, steptimer_timeline, \
             write_chrome_trace
         from repro.sim import StepTimer

@@ -1,2 +1,3 @@
 """COCO-EF core: the paper's contribution (compression + coding + EF)."""
-from . import coding, collectives, compression, error_feedback, cocoef  # noqa: F401
+from . import coding, coding_state, collectives, compression, \
+    error_feedback, cocoef  # noqa: F401

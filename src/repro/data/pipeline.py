@@ -25,8 +25,8 @@ import jax.numpy as jnp
 import numpy as np
 
 __all__ = ["SyntheticLMConfig", "synthetic_lm_batch", "subset_batch_for_rank",
-           "coded_train_batch", "coded_batch_stream", "prefetch_to_device",
-           "PrefetchStats", "host_stream"]
+           "coded_train_batch", "elastic_train_batch", "coded_batch_stream",
+           "prefetch_to_device", "PrefetchStats", "host_stream"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -101,6 +101,48 @@ def coded_train_batch(key: jax.Array, step, allocation, W, per_subset: int,
         toks.append(t)
         wts.append(w)
     return jnp.stack(toks), jnp.stack(wts)
+
+
+def elastic_train_batch(key: jax.Array, step, allocation, per_subset: int,
+                        seq_len: int, vocab: int
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """`coded_train_batch` with the encode weights left OUT of the batch:
+    (tokens (N_code, b_loc, L+1) i32, weights (N_code, b_loc) f32 = 1,
+    subset_ids (N_code, b_loc) i32).
+
+    The dynamic coding plane folds W in-graph instead:
+    `take_along_axis(W / per_subset, subset_ids, 1)`, with the division
+    applied HOST-side by `launch.train.elastic_coding_state` — the
+    identical IEEE f32 division the static path does here, so with the
+    same W the two paths produce bit-for-bit equal per-example weights
+    while W stays free to change every step without a retrace.  Tokens
+    are generated subset-by-subset exactly as `coded_train_batch` does,
+    so the examples themselves are bit-identical too.
+
+    Requires a uniform per-rank subset count (the stacked shape must be
+    rectangular AND stable across re-allocations):
+    `rate_aware_allocation(..., exact_load=True)` or `cyclic_allocation`
+    with N | d*M guarantee it.
+    """
+    counts = np.asarray(allocation.S).sum(axis=1)
+    if np.any(counts != counts[0]):
+        raise ValueError(
+            f"elastic batches need a uniform per-rank subset count, got "
+            f"loads {counts.tolist()} — use rate_aware_allocation("
+            f"exact_load=True)")
+    toks, sids_out = [], []
+    for i in range(allocation.num_devices):
+        sids = allocation.subsets_of(i)
+        rows = []
+        for sid in sids.tolist():
+            sk = jax.random.fold_in(key, np.uint32(sid))
+            rows.append(synthetic_lm_batch(sk, step, per_subset, seq_len,
+                                           vocab))
+        toks.append(jnp.concatenate(rows, 0))
+        sids_out.append(np.repeat(sids.astype(np.int32), per_subset))
+    b_loc = int(counts[0]) * per_subset
+    weights = jnp.ones((allocation.num_devices, b_loc), jnp.float32)
+    return jnp.stack(toks), weights, jnp.asarray(np.stack(sids_out))
 
 
 def coded_batch_stream(key: jax.Array, allocation, W, per_subset: int,

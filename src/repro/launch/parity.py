@@ -58,12 +58,20 @@ def run_parity(compressor: str = "sign", T: int = 20, N: int = 4,
                shards: int = 2, dim: int = 1024, gamma: float = 2e-6,
                p: float = 0.25, d: int = 2, seed: int = 0,
                backend: str = "jnp", num_buckets: int = 1,
-               bucket_schedule: str = "pipelined") -> Dict:
+               bucket_schedule: str = "pipelined",
+               dynamic_state: bool = False) -> Dict:
     """Train the reference EF loop and the mesh `cocoef_update` step on the
     same linreg task / masks / wire for `T` steps and compare trajectories.
 
     Returns a report dict; `bitexact` is True iff theta AND the error
     vectors match bit-for-bit at EVERY recorded step.
+
+    dynamic_state=True runs a THIRD trajectory through the same mesh step
+    with the encode weights coming from a live `core.coding_state`
+    CodingPlan pinned to the oracle rates — W is recomputed by
+    `maybe_replan` every step and fed as a jit ARGUMENT instead of a
+    closure constant.  The elastic coding plane's acceptance criterion is
+    that this trajectory is bit-for-bit the static one.
     """
     if compressor not in PARITY_COMPRESSORS:
         raise ValueError(f"parity covers {PARITY_COMPRESSORS}, "
@@ -124,25 +132,51 @@ def run_parity(compressor: str = "sign", T: int = 20, N: int = 4,
         e_flat = np.asarray(e_out)
         mesh_rec.append(_records(theta, e_flat.reshape(N, dim)))
 
+    # ---- dynamic CodingState: W from maybe_replan, as a jit argument ------
+    dyn_rec: List[Dict[str, np.ndarray]] = []
+    if dynamic_state:
+        from repro.core.coding_state import CodingPlan, maybe_replan
+        # oracle rates of the iid Bernoulli process: uniform 1-p, which
+        # hits encode_weights' eq.-3 branch -> W identical to the static
+        # encode_weights(alloc, p) above, every step, bit-for-bit
+        oracle = np.full((N,), 1.0 - p)
+        plan = CodingPlan.create(oracle, N, d, allocation=alloc)
+        coded_dyn = jax.jit(lambda th, Wt: Wt @ grad_fn(th))
+        theta = np.asarray(theta0)
+        e_flat = np.zeros((N * dim,), np.float32)
+        for t in range(T):
+            cs, info = maybe_replan(plan, oracle)
+            assert not info["reallocated"], "pinned rates must never drift"
+            g = coded_dyn(jnp.asarray(theta), cs.W)
+            ghat, e_out = step_fn(g.reshape(-1), jnp.asarray(e_flat),
+                                  masks[t])
+            theta = theta - np.asarray(ghat)
+            e_flat = np.asarray(e_out)
+            dyn_rec.append(_records(theta, e_flat.reshape(N, dim)))
+
     # ---- compare ----------------------------------------------------------
     first_div: Optional[Dict] = None
     max_dtheta = max_de = 0.0
+    sides = [("mesh", mesh_rec)] + ([("dynamic", dyn_rec)]
+                                    if dynamic_state else [])
     for t in range(T):
-        for field in ("theta", "e"):
-            a, b = ref[t][field], mesh_rec[t][field]
-            if not np.array_equal(a, b):
-                diff = float(np.max(np.abs(a - b)))
-                if field == "theta":
-                    max_dtheta = max(max_dtheta, diff)
-                else:
-                    max_de = max(max_de, diff)
-                if first_div is None:
-                    first_div = {"step": t, "field": field,
-                                 "max_abs_diff": diff}
+        for side, rec in sides:
+            for field in ("theta", "e"):
+                a, b = ref[t][field], rec[t][field]
+                if not np.array_equal(a, b):
+                    diff = float(np.max(np.abs(a - b)))
+                    if field == "theta":
+                        max_dtheta = max(max_dtheta, diff)
+                    else:
+                        max_de = max(max_de, diff)
+                    if first_div is None:
+                        first_div = {"step": t, "field": field,
+                                     "side": side, "max_abs_diff": diff}
     return {
         "compressor": compressor, "wire": type(wire).__name__,
         "T": T, "N": N, "shards": shards, "dim": dim, "gamma": gamma,
         "p": p, "d": d, "backend": backend,
+        "dynamic_state": dynamic_state,
         "bitexact": first_div is None,
         "first_divergence": first_div,
         "max_abs_diff_theta": max_dtheta,

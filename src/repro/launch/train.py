@@ -34,6 +34,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro import compat
 from repro.configs.common import ArchSpec, ShapeCfg
 from repro.core import coding
+from repro.core.coding_state import CodingPlan, CodingState
 from repro.core.cocoef import (CocoEFConfig, FlatMeta, cocoef_update,
                                flatten_local, padded_size, unflatten_local)
 from repro.nn import Model
@@ -45,7 +46,7 @@ from repro.sharding import ctx, rules
 from repro.sim import stragglers
 
 __all__ = ["TrainRun", "build_train_setup", "setup_encode_weights",
-           "batch_stream"]
+           "elastic_coding_state", "batch_stream"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,6 +82,14 @@ class TrainRun:
     k_budgets: Optional[Tuple[int, ...]] = None
     #   per-coding-rank block-top-K wire budgets (sim.solve_k_budgets);
     #   overrides spec.coding.k_per_block when compressor="block_topk"
+    elastic: bool = False            # dynamic coding plane: the train step
+    #   takes an explicit CodingState (rates_estimate, W, epoch) argument
+    #   and folds W in-graph via the batch's subset_ids, so online rate
+    #   estimates (obs.MetricsLogger.rates -> CodingPlan.maybe_replan) can
+    #   update the encode weights every step without retracing; False = W
+    #   baked into the batch weights at construction (the static path)
+    replan_threshold: float = 0.1    # elastic: max |q_est - q_planned|
+    #   before the host recomputes the allocation (epoch bump)
     seed: int = 0
     aux_weight: float = 0.01
     param_dtype: Optional[str] = None   # override cfg (e.g. "bfloat16")
@@ -125,6 +134,14 @@ class TrainRun:
         if self.k_budgets is not None and \
                 any(k < 1 for k in self.k_budgets):
             raise ValueError("every per-rank k budget must be >= 1")
+        if not self.replan_threshold > 0.0:
+            raise ValueError(f"replan_threshold={self.replan_threshold} "
+                             f"must be > 0")
+        if self.elastic and self.prefetch:
+            raise ValueError(
+                "elastic runs need synchronous batches (prefetch=0): a "
+                "replan changes the subset placement between batch "
+                "generation and consumption")
 
 
 @dataclasses.dataclass
@@ -148,6 +165,11 @@ class TrainSetup:
     allocation: coding.Allocation
     cocoef_cfg: CocoEFConfig
     straggler_process: Optional[stragglers.StragglerProcess] = None
+    coding_plan: Optional[CodingPlan] = None   # elastic runs: the host-side
+    #   replan controller; its CURRENT allocation is what the batch maker
+    #   uses (setup.allocation stays the epoch-0 placement)
+    per_subset: int = 1              # examples per subset (the batch-maker
+    #   1/per_subset fold elastic_coding_state applies host-side)
 
 
 def _local_flat_size(shapes_tree, specs_tree, mesh: Mesh) -> int:
@@ -286,8 +308,27 @@ def build_train_setup(spec: ArchSpec, mesh: Mesh, shape: ShapeCfg,
                                            jnp.bfloat16),
             "targets": jax.ShapeDtypeStruct((n_code, b_loc, seq), jnp.int32),
             "weights": jax.ShapeDtypeStruct((n_code, b_loc), jnp.float32)}
+    if run.elastic:
+        # per-example subset ids ride the batch (same layout as weights);
+        # the step looks the live W up through them in-graph
+        batch_specs["subset_ids"] = P(lead, inner)
+        batch_shapes["subset_ids"] = jax.ShapeDtypeStruct(
+            (n_code, b_loc), jnp.int32)
     batch_shardings = jax.tree.map(lambda s: NamedSharding(mesh, s),
                                    batch_specs)
+
+    # ---- dynamic coding plane (elastic runs) -------------------------------
+    coding_plan = None
+    if run.elastic:
+        # initial estimate = whatever the static path would bake in, so
+        # epoch 0 of the dynamic path is bit-for-bit the static path
+        # (uniform rates hit encode_weights' eq.-3 branch)
+        init_rates = np.asarray(straggler_rates, np.float64) \
+            if straggler_rates is not None \
+            else np.full((max(n_code, 1),), 1.0 - p_strag)
+        coding_plan = CodingPlan.create(
+            init_rates, M, d, drift_threshold=run.replan_threshold,
+            exact_load=True, allocation=alloc)
 
     # =======================================================================
     # stage 2 body (fully manual)
@@ -387,7 +428,7 @@ def build_train_setup(spec: ArchSpec, mesh: Mesh, shape: ShapeCfg,
                     w16, NamedSharding(mesh, _P(*spec)))
             return jax.tree_util.tree_map_with_path(f, tree)
 
-    def train_step(params, e, opt, batch, step, key):
+    def base_step(params, e, opt, batch, step, key):
         def loss_one(p, b):
             loss, per_ex = model.loss(p, b)
             return loss
@@ -415,8 +456,39 @@ def build_train_setup(spec: ArchSpec, mesh: Mesh, shape: ShapeCfg,
                 frame_grid, mesh.axis_names, coding_axes)
         return params_new, e_new, opt_new, metrics
 
+    if run.elastic:
+        def train_step(params, e, opt, batch, step, key, coding_state):
+            # fold the LIVE encode weights in-graph.  coding_state.W here
+            # is ALREADY W/per_subset (elastic_coding_state divides on the
+            # host): the per-example weight must be the identical f32
+            # value the static batch maker bakes in, and an in-graph
+            # divide-by-constant is strength-reduced by XLA to a
+            # reciprocal multiply (off by an ulp for non-pow2
+            # per_subset).  W is a pytree leaf: new value, no retrace.
+            coef = jnp.take_along_axis(
+                coding_state.W, batch["subset_ids"], axis=1)
+            b = {k: v for k, v in batch.items() if k != "subset_ids"}
+            b["weights"] = b["weights"] * coef
+            p_new, e_new, opt_new, metrics = base_step(params, e, opt, b,
+                                                       step, key)
+            # echo the plane's state so drivers can donate coding_state
+            # (every leaf is an output -> XLA aliases the buffers)
+            metrics = dict(metrics, coding_epoch=coding_state.epoch,
+                           coding_W=coding_state.W,
+                           rates_estimate=coding_state.rates_estimate)
+            return p_new, e_new, opt_new, metrics
+    else:
+        train_step = base_step
+
     # ---- specs / init ------------------------------------------------------
     def input_specs():
+        cs = {}
+        if run.elastic:
+            cs["coding_state"] = CodingState(
+                rates_estimate=jax.ShapeDtypeStruct((max(n_code, 1),),
+                                                    jnp.float32),
+                W=jax.ShapeDtypeStruct((max(n_code, 1), M), jnp.float32),
+                epoch=jax.ShapeDtypeStruct((), jnp.int32))
         return {
             "params": jax.tree.map(
                 lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
@@ -431,6 +503,7 @@ def build_train_setup(spec: ArchSpec, mesh: Mesh, shape: ShapeCfg,
                 batch_shapes, batch_shardings),
             "step": jax.ShapeDtypeStruct((), jnp.int32),
             "key": jax.ShapeDtypeStruct((2,), jnp.uint32),
+            **cs,
         }
 
     def init_state(key):
@@ -448,7 +521,8 @@ def build_train_setup(spec: ArchSpec, mesh: Mesh, shape: ShapeCfg,
         state_sharding=state_sharding, batch_shardings=batch_shardings,
         train_step=train_step, input_specs=input_specs, init_state=init_state,
         allocation=alloc, cocoef_cfg=cocoef_cfg,
-        straggler_process=straggler_proc)
+        straggler_process=straggler_proc, coding_plan=coding_plan,
+        per_subset=per_subset)
 
 
 def setup_encode_weights(setup: TrainSetup) -> jnp.ndarray:
@@ -464,6 +538,25 @@ def setup_encode_weights(setup: TrainSetup) -> jnp.ndarray:
                                  setup.cocoef_cfg.straggler_p)
 
 
+def elastic_coding_state(setup: TrainSetup, rates=None):
+    """One coding-plane control tick for the elastic train loop.
+
+    Runs `CodingPlan.maybe_replan` on the latest rate estimates (None —
+    e.g. `MetricsLogger.rates` before the first step — keeps the planned
+    rates), then applies the batch maker's 1/per_subset fold HOST-side
+    (numpy f32, the exact division the static path bakes into its batch
+    weights; an in-graph divide would be strength-reduced by XLA and lose
+    the last ulp).  Returns (CodingState ready to feed the jitted step,
+    replan info dict for `MetricsLogger.log_replan`).
+    """
+    from repro.core import coding_state as cs
+    if setup.coding_plan is None:
+        raise ValueError("setup was built without TrainRun.elastic")
+    st, info = cs.maybe_replan(setup.coding_plan, rates)
+    W_scaled = jnp.asarray(np.asarray(st.W) / setup.per_subset)
+    return st._replace(W=W_scaled), info
+
+
 def make_batch_for_step(setup: TrainSetup, spec: ArchSpec, shape: ShapeCfg,
                         key, step: int, smoke: bool = False):
     """Materialize a real global batch (smoke/integration runs).
@@ -476,16 +569,27 @@ def make_batch_for_step(setup: TrainSetup, spec: ArchSpec, shape: ShapeCfg,
 
     cfg = spec.smoke if smoke else spec.config
     n_code, b_loc, seq = setup.n_code, setup.b_loc, setup.seq_len
-    W = setup_encode_weights(setup)
     per_subset = max(1, shape.global_batch // setup.allocation.num_subsets)
-    toks, wts = pipeline.coded_train_batch(key, step, setup.allocation, W,
-                                           per_subset, seq, cfg.vocab_size)
+    if setup.coding_plan is not None:
+        # elastic: weights stay OUT of the batch (the step folds the live
+        # CodingState.W in-graph via subset_ids); the plan's CURRENT
+        # allocation decides the placement, so an epoch bump takes effect
+        # at the next batch without retracing (uniform load keeps shapes)
+        toks, wts, sids = pipeline.elastic_train_batch(
+            key, step, setup.coding_plan.allocation, per_subset, seq,
+            cfg.vocab_size)
+        extra = {"subset_ids": sids}
+    else:
+        W = setup_encode_weights(setup)
+        toks, wts = pipeline.coded_train_batch(
+            key, step, setup.allocation, W, per_subset, seq, cfg.vocab_size)
+        extra = {}
     if cfg.input_mode == "tokens":
-        return {"inputs": toks, "weights": wts}
+        return {"inputs": toks, "weights": wts, **extra}
     emb = jax.random.normal(key, (n_code, b_loc, seq, cfg.d_model),
                             jnp.bfloat16) * 0.02
     tgt = toks[..., :-1]
-    return {"inputs": emb, "targets": tgt, "weights": wts}
+    return {"inputs": emb, "targets": tgt, "weights": wts, **extra}
 
 
 def batch_stream(setup: TrainSetup, spec: ArchSpec, shape: ShapeCfg, key,

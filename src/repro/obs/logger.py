@@ -18,10 +18,17 @@ Record kinds (schema `repro.obs/v1`):
   serve_request one served request (queue wait / prefill / decode)
   serve_summary latency histogram summary (p50/p99, queue wait)
   prefetch      a `data.pipeline.PrefetchStats` snapshot
+  replan        one coding-plane control tick (`CodingPlan.maybe_replan`):
+                epoch / drift / reallocated / rates_estimate
 
-The logger also maintains the per-rank EWMA participation rates over the
-observed masks — the online rate estimate ROADMAP item 4 needs as input
-(`MetricsLogger.rates` feeds `coding.encode_weights(alloc, rates=...)`).
+The logger also maintains the bias-corrected per-rank EWMA participation
+rates over the observed masks — the online rate estimate ROADMAP item 4
+needs as input (`MetricsLogger.rates` feeds
+`core.coding_state.CodingPlan.maybe_replan`, which refits
+`coding.encode_weights` and re-allocates on drift).  The correction is
+implemented inline (not via `core.coding_state.RateEstimator`) because
+`repro.core` imports `repro.obs`; a test pins the two implementations to
+bit-identical outputs.
 """
 from __future__ import annotations
 
@@ -38,7 +45,7 @@ __all__ = ["SCHEMA", "MetricsLogger", "validate_record", "read_jsonl"]
 SCHEMA = "repro.obs/v1"
 
 _KINDS = ("run_meta", "train_step", "serve_request", "serve_summary",
-          "prefetch")
+          "prefetch", "replan")
 
 # required per-kind fields and their coarse types (beyond schema/kind)
 _REQUIRED = {
@@ -62,6 +69,9 @@ _REQUIRED = {
                       "queue_wait_ms": dict, "prefill_ms": dict,
                       "decode_token_ms": dict},
     "prefetch": {"stats": dict},
+    "replan": {"step": numbers.Number, "epoch": numbers.Number,
+               "drift": numbers.Number, "reallocated": bool,
+               "rates_estimate": list},
 }
 
 _HIST_KEYS = ("p50", "p99", "mean", "count")
@@ -163,28 +173,48 @@ class MetricsLogger:
         one train_step record; updates the participation EWMA."""
         tel = {k: _to_plain(v) for k, v in telemetry.items()}
         mask = np.asarray(tel["participation"], np.float64)
+        a = self.ewma_alpha
         if self._ewma is None:
-            self._ewma = mask.copy()
-        else:
-            a = self.ewma_alpha
-            self._ewma = (1.0 - a) * self._ewma + a * mask
+            self._ewma = np.zeros_like(mask)
+        # zero-init accumulator + Adam-style bias correction (divide by
+        # 1 - (1-a)^t): the reported estimate is an exact weighted average
+        # of the masks seen so far.  Seeding from the first mask instead
+        # left early estimates dominated by step-0 noise for ~1/a steps.
+        self._ewma = (1.0 - a) * self._ewma + a * mask
         self._steps += 1
         rec = {"kind": "train_step", "step": int(step),
                "t_wall_s": float(t_wall_s if t_wall_s is not None
                                  else time.time()),
-               "ewma_participation": self._ewma.tolist(), **tel}
+               "ewma_participation": self._corrected().tolist(), **tel}
         if loss is not None:
             rec["loss"] = float(loss)
         if spans:
             rec["spans"] = {k: float(v) for k, v in spans.items()}
         return self.write(rec)
 
+    def _corrected(self) -> np.ndarray:
+        # np.power, NOT python **: the two differ in the last ulp and this
+        # must match core.coding_state.RateEstimator bit-for-bit
+        corr = 1.0 - np.power(1.0 - self.ewma_alpha, float(self._steps))
+        return self._ewma / corr
+
     @property
     def rates(self) -> Optional[np.ndarray]:
-        """(N,) EWMA per-rank participation rates over the logged steps —
-        the online q_i estimate (ROADMAP item 4's input).  None before the
-        first step."""
-        return None if self._ewma is None else self._ewma.copy()
+        """(N,) bias-corrected EWMA per-rank participation rates over the
+        logged steps — the online q_i estimate that feeds
+        `core.coding_state.CodingPlan.maybe_replan` (ROADMAP item 4).
+        None before the first step."""
+        return None if self._ewma is None else self._corrected()
+
+    def log_replan(self, step: int, info: Dict[str, object]) -> dict:
+        """One `CodingPlan.maybe_replan` host event -> a replan record
+        (epoch / drift / reallocated / rates_estimate)."""
+        return self.write({"kind": "replan", "step": int(step),
+                           "epoch": int(info["epoch"]),
+                           "drift": float(info["drift"]),
+                           "reallocated": bool(info["reallocated"]),
+                           "rates_estimate":
+                               [float(x) for x in info["rates_estimate"]]})
 
     @property
     def steps_logged(self) -> int:

@@ -67,7 +67,9 @@ class LinkProfile:
     def __post_init__(self):
         if self.bandwidth_gbps <= 0:
             raise ValueError("uplink bandwidth must be positive")
-        if any(b <= 0 for b in self.rank_bandwidth_gbps):
+        if self.rank_bandwidth_gbps and \
+                np.any(np.asarray(self.rank_bandwidth_gbps,
+                                  np.float64) <= 0):
             raise ValueError("every per-rank uplink bandwidth must be "
                              "positive")
 

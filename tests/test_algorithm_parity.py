@@ -26,6 +26,40 @@ def test_reference_vs_mesh_parity_sign_quick():
     """, timeout=600)
 
 
+def test_dynamic_coding_state_parity_sign_quick():
+    """Tier-1 elastic-plane gate: with the rate estimate pinned to the
+    oracle rates, the dynamic CodingState trajectory (W recomputed by
+    maybe_replan every step, fed as a jit argument) is bit-for-bit the
+    static trajectory."""
+    run_sub("""
+    from repro.launch.parity import assert_parity, run_parity
+    rep = run_parity("sign", T=10, dynamic_state=True)
+    assert_parity(rep)
+    assert rep["dynamic_state"], rep
+    """, timeout=600)
+
+
+@pytest.mark.slow
+def test_dynamic_coding_state_parity_all_wires_schedules():
+    """The elastic acceptance criterion in full: every parity wire x
+    backend x bucket schedule stays bit-for-bit with the dynamic
+    CodingState path."""
+    run_sub("""
+    from repro.launch.parity import (PARITY_COMPRESSORS, assert_parity,
+                                     run_parity)
+    for comp in PARITY_COMPRESSORS:
+        rep = run_parity(comp, T=15, dynamic_state=True)
+        assert_parity(rep)
+    for comp in ("sign", "block_topk"):
+        rep = run_parity(comp, T=8, backend="pallas", dynamic_state=True)
+        assert_parity(rep)
+        for sched in ("serial", "pipelined"):
+            rep = run_parity(comp, T=8, num_buckets=2,
+                             bucket_schedule=sched, dynamic_state=True)
+            assert_parity(rep)
+    """, timeout=900)
+
+
 @pytest.mark.slow
 def test_reference_vs_mesh_parity_all_wires_trained_run():
     """The full gate: sign / block_topk / dense (identity) wires, 25-step

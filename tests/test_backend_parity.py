@@ -285,3 +285,39 @@ def test_schedule_parity_serial_vs_pipelined():
             assert np.array_equal(np.asarray(e1), np.asarray(e2)), \
                 ("e_new", mode, comp, wdt)
     """, timeout=900)
+
+
+# ---------------------------------------------------------------------------
+# dynamic coding plane: in-graph W fold == host-side W fold, bitwise
+# ---------------------------------------------------------------------------
+
+def test_elastic_weight_fold_matches_host_fold_bitwise():
+    """The elastic step's in-graph per-example weights
+    (take_along_axis(W/per_subset, subset_ids), scaled W a jit ARGUMENT)
+    must be bit-for-bit the static batch maker's host-side numpy fold
+    (W[i, sids] / per_subset baked into the batch).  The 1/per_subset
+    division happens on the HOST on both sides — an in-graph
+    divide-by-constant is strength-reduced by XLA to a reciprocal
+    multiply, which this test catches for non-pow2 per_subset (3, 5)."""
+    from repro.core import coding
+    from repro.data import pipeline
+
+    rng = np.random.default_rng(0)
+    for N, d, per_subset in [(8, 2, 4), (8, 2, 3), (6, 3, 5)]:
+        q = rng.uniform(0.3, 1.0, N)
+        alloc = coding.rate_aware_allocation(q, N, d, exact_load=True)
+        W = coding.encode_weights(alloc, rates=q)
+        toks_s, wts_s = pipeline.coded_train_batch(
+            jax.random.PRNGKey(1), 3, alloc, W, per_subset, 16, 97)
+        toks_e, wts_e, sids = pipeline.elastic_train_batch(
+            jax.random.PRNGKey(1), 3, alloc, per_subset, 16, 97)
+        assert np.array_equal(np.asarray(toks_s), np.asarray(toks_e))
+        W_scaled = jnp.asarray(np.asarray(W) / per_subset)
+
+        @jax.jit
+        def fold(Wt, sids, base):
+            return base * jnp.take_along_axis(Wt, sids, axis=1)
+
+        folded = fold(W_scaled, sids, wts_e)
+        assert np.array_equal(np.asarray(folded), np.asarray(wts_s)), \
+            (N, d, per_subset)

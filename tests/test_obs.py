@@ -112,10 +112,15 @@ def test_metrics_logger_jsonl_and_ewma(tmp_path):
                          "device_put_s": 0.01, "max_depth": 2,
                          "depth_sum": 4})
         assert lg.steps_logged == 3
-    # EWMA recurrence: e_0 = m_0; e_t = (1-a) e + a m
-    expect = masks[0].copy()
-    for m in masks[1:]:
-        expect = 0.5 * expect + 0.5 * m
+    # bias-corrected EWMA: zero-init s_t = (1-a) s + a m, reported
+    # s_t / (1 - (1-a)^t) — an exact weighted average of the masks seen
+    # (for a=0.5, T=3: (m0 + 2 m1 + 4 m2) / 7)
+    s = np.zeros_like(masks[0])
+    for m in masks:
+        s = 0.5 * s + 0.5 * m
+    expect = s / (1.0 - 0.5 ** len(masks))
+    np.testing.assert_allclose(expect, (masks[0] + 2 * masks[1]
+                                        + 4 * masks[2]) / 7.0)
     np.testing.assert_allclose(ew, expect)
     recs = read_jsonl(path)
     assert [r["kind"] for r in recs] == \
@@ -123,6 +128,8 @@ def test_metrics_logger_jsonl_and_ewma(tmp_path):
     for r in recs:
         validate_record(r)     # every emitted line passes the schema gate
     np.testing.assert_allclose(recs[3]["ewma_participation"], expect)
+    # at t=1 the correction makes the estimate exactly the first mask
+    np.testing.assert_allclose(recs[1]["ewma_participation"], masks[0])
     assert recs[1]["loss"] == pytest.approx(1.0)
     # a malformed record never reaches the file, and closed loggers refuse
     with pytest.raises(ValueError):
@@ -131,6 +138,77 @@ def test_metrics_logger_jsonl_and_ewma(tmp_path):
     lg2.close()
     with pytest.raises(ValueError, match="closed"):
         lg2.log_prefetch({"size": 1})
+
+
+def test_ewma_bias_correction_5step_regression(tmp_path):
+    """Satellite regression pin: under a known-rate Bernoulli process the
+    bias-corrected estimate after 5 steps is an exact weighted average of
+    the observed masks, so its error against the empirical mean is bounded
+    by the (small) geometric reweighting — NOT by step-0 noise, which
+    dominated the first ~1/alpha steps under the old first-mask seeding."""
+    from repro.obs import MetricsLogger
+    rng = np.random.default_rng(7)
+    q = np.array([0.9, 0.6, 0.3, 0.8])
+    masks = (rng.uniform(size=(5, 4)) < q).astype(np.float64)
+    a = 0.1
+    with MetricsLogger(str(tmp_path / "m.jsonl"), ewma_alpha=a) as lg:
+        for t, m in enumerate(masks):
+            tel = _train_step_telemetry()
+            tel["participation"] = m.tolist()
+            lg.log_step(t, tel)
+        est = lg.rates
+    # closed form: weights (1-a)^(T-1-t) * a, normalized by 1-(1-a)^T
+    w = a * (1.0 - a) ** np.arange(len(masks) - 1, -1, -1)
+    expect = (w[:, None] * masks).sum(0) / (1.0 - (1.0 - a) ** len(masks))
+    np.testing.assert_allclose(est, expect, rtol=1e-12)
+    # with alpha=0.1 the corrected weights are within 34% of uniform over
+    # 5 steps, so the estimate stays near the empirical mean...
+    emp = masks.mean(0)
+    assert np.max(np.abs(est - emp)) < 0.25
+    # ...while the OLD seeded estimate is pinned to the first mask:
+    # weight of m_0 is (1-a)^4 ~ 0.66, so a first-step outage drags a
+    # q=0.9 rank's estimate below 0.7 for ~1/a steps
+    seeded = masks[0].copy()
+    for m in masks[1:]:
+        seeded = (1.0 - a) * seeded + a * m
+    assert np.max(np.abs(seeded - emp)) > np.max(np.abs(est - emp))
+
+
+def test_logger_ewma_matches_rate_estimator():
+    """The logger's inline bias correction and the standalone
+    `core.coding_state.RateEstimator` are twin implementations (the
+    logger cannot import core); they must agree bit-for-bit."""
+    from repro.core.coding_state import RateEstimator
+    from repro.obs import MetricsLogger
+    import tempfile
+    rng = np.random.default_rng(3)
+    masks = (rng.uniform(size=(12, 4)) < 0.7).astype(np.float64)
+    est = RateEstimator(4, alpha=0.2)
+    with tempfile.TemporaryDirectory() as d:
+        with MetricsLogger(d + "/m.jsonl", ewma_alpha=0.2) as lg:
+            for t, m in enumerate(masks):
+                tel = _train_step_telemetry()
+                tel["participation"] = m.tolist()
+                lg.log_step(t, tel)
+                est.update(m)
+                assert (lg.rates == est.rates).all()
+
+
+def test_replan_record_schema(tmp_path):
+    from repro.obs import MetricsLogger, read_jsonl, validate_record
+    path = str(tmp_path / "m.jsonl")
+    with MetricsLogger(path) as lg:
+        rec = lg.log_replan(3, {"epoch": 1, "drift": 0.17,
+                                "reallocated": True,
+                                "rates_estimate": [0.9, 0.5]})
+        validate_record(rec)
+    recs = read_jsonl(path)
+    assert recs[-1]["kind"] == "replan"
+    assert recs[-1]["reallocated"] is True
+    assert recs[-1]["epoch"] == 1
+    with pytest.raises(ValueError, match="missing field"):
+        validate_record({"schema": "repro.obs/v1", "kind": "replan",
+                         "step": 1})
 
 
 def test_serve_telemetry_percentiles_and_records(tmp_path):
