@@ -15,9 +15,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import dataclasses
+
 from repro.core import coding, compression as C, error_feedback as EF
+from repro.core.plan import PlanSpec
 from repro.data import tasks
-from repro.sim import IIDBernoulli, StragglerProcess
+from repro.sim import IIDBernoulli, StragglerProcess, plan_timer  # noqa: F401
+# ^ plan_timer re-exported: benchmarks price StepTimers through the ONE
+#   plan -> timer mapping ("the config priced is the config run")
 
 
 def results_dir() -> Path:
@@ -27,6 +32,32 @@ def results_dir() -> Path:
     if env:
         return Path(env)
     return Path(__file__).resolve().parents[1] / "results" / "repro"
+
+def plan_from_args(args=None, base: Optional[PlanSpec] = None,
+                   **overrides) -> PlanSpec:
+    """THE benchmark-side PlanSpec assembly (shared by fig8-fig12).
+
+    Starts from `base` (a figure's METHODS-table plan, default PlanSpec()),
+    folds the shared CLI knobs when present on `args` (--num-buckets,
+    --overlap -> bucket_schedule, --backend, --compressor), then any
+    explicit keyword overrides.  Every figure routes its knob plumbing
+    through here so one PlanSpec object drives the mesh step, the
+    StepTimer pricing (`plan_timer`), and the comm-volume accounting."""
+    kw = {}
+    if args is not None:
+        if getattr(args, "num_buckets", None) is not None:
+            kw["num_buckets"] = args.num_buckets
+        if hasattr(args, "overlap"):
+            kw["bucket_schedule"] = ("pipelined" if args.overlap
+                                     else "serial")
+        if getattr(args, "backend", None):
+            kw["backend"] = args.backend
+        if getattr(args, "compressor", None):
+            kw["compressor"] = args.compressor
+    kw.update(overrides)
+    base = base if base is not None else PlanSpec()
+    return dataclasses.replace(base, **kw) if kw else base
+
 
 METHODS = {
     "cocoef": EF.cocoef_step,

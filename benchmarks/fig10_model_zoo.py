@@ -50,6 +50,7 @@ import numpy as np
 from repro.compat import make_mesh
 from repro.configs import REGISTRY, SMOKE_TRAIN
 from repro.core.collectives import DenseWire
+from repro.core.plan import PlanSpec
 from repro.launch.train import (TrainRun, build_train_setup,
                                 make_batch_for_step)
 from repro.sim import (DEFAULT_LINK, ComputeProfile, StepTimer, attach_times,
@@ -79,24 +80,33 @@ _SMOKE_CODING = dict(group_size=32, block_size=64, k_per_block=4,
                      straggler_p=P_STRAG)
 
 
-def _train_run(wire_name: str, straggler: str,
+def _train_run(wire_name: str, straggler: str, coding_cfg,
                num_buckets: int = 1, overlap: bool = False) -> TrainRun:
     if wire_name == "dense":
         return TrainRun(mode="dense", base_lr=1e-2, straggler=straggler,
                         straggler_burst=4.0, straggler_spread=0.5)
-    # the schedule the cost model prices must be the one the mesh runs
-    return TrainRun(mode="cocoef", compressor=wire_name, base_lr=1e-2,
-                    num_buckets=num_buckets,
-                    bucket_schedule="pipelined" if overlap else "serial",
+    # explicit PlanSpec, not the deprecated alias fields: the one plan
+    # object carries wire + bucket schedule, so the schedule the cost
+    # model prices is the one the mesh runs by construction
+    plan = R.plan_from_args(base=PlanSpec(
+        d=coding_cfg.redundancy, compressor=wire_name,
+        group_size=coding_cfg.group_size,
+        k_per_block=coding_cfg.k_per_block,
+        block_size=coding_cfg.block_size, topk_k=coding_cfg.topk_k,
+        value_dtype=coding_cfg.wire_dtype, num_buckets=num_buckets,
+        bucket_schedule="pipelined" if overlap else "serial"))
+    return TrainRun(mode="cocoef", plan=plan, base_lr=1e-2,
                     straggler=straggler, straggler_burst=4.0,
                     straggler_spread=0.5)
 
 
 def _timer_wire(setup, wire_name: str):
-    """The phase-1 wire format the cost model charges for this cell."""
+    """The phase-1 wire format the cost model charges for this cell —
+    derived from setup.plan, the very PlanSpec the mesh step was built
+    from (dense mode carries no plan wire)."""
     if wire_name == "dense":
         return DenseWire()
-    return setup.cocoef_cfg.wire_format(setup.flat_pad, 1)
+    return setup.plan.wire(setup.flat_pad, 1)
 
 
 def run_cell(arch: str, wire_name: str, straggler: str, mesh, shape, *,
@@ -113,8 +123,8 @@ def run_cell(arch: str, wire_name: str, straggler: str, mesh, shape, *,
     if cfg.input_mode != "tokens":
         raise ValueError(f"{arch}: fig10 feeds token batches from "
                          f"data.pipeline (input_mode={cfg.input_mode!r})")
-    run = _train_run(wire_name, straggler, num_buckets=num_buckets,
-                     overlap=overlap)
+    run = _train_run(wire_name, straggler, spec.coding,
+                     num_buckets=num_buckets, overlap=overlap)
     setup = build_train_setup(spec, mesh, shape, run, smoke=True)
     proc = setup.straggler_process
     assert proc is not None, "straggler_p > 0 must build a process"
@@ -169,6 +179,7 @@ def run_cell(arch: str, wire_name: str, straggler: str, mesh, shape, *,
         "bytes_up_per_rank": int(wire.wire_bytes(n_wire)),
         "n_code": setup.n_code,
         "flat_pad": setup.flat_pad,
+        "plan": setup.plan.to_dict(),
     }
 
 

@@ -45,8 +45,10 @@ from repro.checkpoint import elastic_rescale_ef
 from repro.core import coding, compression as C, error_feedback as EF
 from repro.core.coding_state import CodingPlan, RateEstimator, maybe_replan
 from repro.core.collectives import SignWire
+from repro.core.plan import PlanSpec
 from repro.sim import (DEFAULT_COMPUTE, DEFAULT_LINK, HeterogeneousRates,
-                       MarkovBursty, StepTimer, TraceReplay)
+                       MarkovBursty, StepTimer, TraceReplay,
+                       elastic_replan_hook)
 
 try:
     from . import _repro_common as R
@@ -89,7 +91,7 @@ def _mean_p(proc) -> float:
     return float(1.0 - np.asarray(proc.rates()).mean())
 
 
-def _plan_for(method, proc, M, d, p_bar, est=None):
+def _plan_for(method, proc, M, d, p_bar, est=None, replan_hook=None):
     """(W provider, per-phase static W or live plan) for one method."""
     rates = np.asarray(proc.rates())
     if method == "oracle":
@@ -100,14 +102,15 @@ def _plan_for(method, proc, M, d, p_bar, est=None):
             np.full((proc.num_devices,), 1.0 - p_bar), M, d)
         return coding.encode_weights(alloc, p_bar), None
     # estimated: the planner starts from the uniform mean-rate guess (all
-    # a fresh deployment knows) and learns the rest online
+    # a fresh deployment knows) and learns the rest online; the optional
+    # hook re-runs the PlanSpec pruning stage on every drift replan
     plan = CodingPlan.create(np.full((proc.num_devices,), 1.0 - p_bar),
-                             M, d)
+                             M, d, replan_hook=replan_hook)
     return None, plan
 
 
 def _run_elastic_trial(method, procs, T, T1, M, d, gamma, seed,
-                       record_every, timer):
+                       record_every, timer, replan_hook=None):
     """One trial of one method through the membership change.  Returns a
     history dict with time_s attached (phase timelines concatenated) and
     replan diagnostics."""
@@ -124,11 +127,13 @@ def _run_elastic_trial(method, procs, T, T1, M, d, gamma, seed,
     cum = np.cumsum(times)
 
     est = RateEstimator(N) if method == "estimated" else None
-    W, plan = _plan_for(method, proc_a, M, d, p_bar, est)
+    W, plan = _plan_for(method, proc_a, M, d, p_bar, est,
+                        replan_hook=replan_hook)
     comp = C.GroupedSign()
     st = EF.EFState.init(theta0, N)
     hist = {"step": [], "loss": [], "time_s": []}
     replans = 0
+    last_ranking = None
 
     def record(t):
         hist["step"].append(t)
@@ -153,6 +158,8 @@ def _run_elastic_trial(method, procs, T, T1, M, d, gamma, seed,
             state, info = maybe_replan(
                 plan, est.rates if est.steps_seen.any() else None)
             replans += int(info["reallocated"])
+            if "plan_ranking" in info:
+                last_ranking = info["plan_ranking"]
             W = np.asarray(state.W)
         st = EF.cocoef_step(st, grad_fn, W, mask, gamma, comp, step=t)
         if method == "estimated":
@@ -160,6 +167,7 @@ def _run_elastic_trial(method, procs, T, T1, M, d, gamma, seed,
         if t % record_every == 0 or t == T - 1:
             record(t)
     hist["replans"] = replans
+    hist["plan_ranking"] = last_ranking
     return hist
 
 
@@ -170,11 +178,16 @@ def run(trials=3, T=400, N=64, gamma=2e-5, record_every=20, d=3,
         trials, T, N, record_every, gamma = 1, 120, 16, 5, 1e-4
     N2 = 3 * N // 4
     M, T1 = N, T // 2
-    wire = SignWire(group_size=512)
-    timer = StepTimer(wire=wire, n=n_wire, link=link, compute=compute)
+    # every method ships the identical sign wire: one PlanSpec prices the
+    # shared StepTimer AND seeds the drift-triggered planner re-invocation
+    plan_spec = R.plan_from_args(base=PlanSpec(d=d, compressor="sign",
+                                               group_size=512))
+    timer = R.plan_timer(plan_spec, n_wire, link, compute)
+    hook = elastic_replan_hook(n_wire, link=link, compute=compute)
     res = {"meta": {**R.run_metadata(), "n_wire": n_wire, "trials": trials,
                     "T": T, "N": N, "N_after": N2, "resize_step": T1,
                     "M": M, "d": d, "gamma": gamma,
+                    "plan": plan_spec.to_dict(),
                     "two_class": {"p_slow": P_SLOW, "p_fast": P_FAST,
                                   "slow_fraction": SLOW_FRACTION},
                     "link": dataclasses.asdict(link),
@@ -183,13 +196,19 @@ def run(trials=3, T=400, N=64, gamma=2e-5, record_every=20, d=3,
 
     for pname, procs in _phase_processes(N, N2, smoke=smoke).items():
         curves, replans = {}, {}
+        rankings = {}
         for mname in METHODS:
             per_trial = [
                 _run_elastic_trial(mname, procs, T, T1, M, d, gamma, s,
-                                   record_every, timer)
+                                   record_every, timer, replan_hook=hook)
                 for s in range(trials)]
             replans[mname] = float(np.mean([h.pop("replans")
                                             for h in per_trial]))
+            ranked = [h.pop("plan_ranking") for h in per_trial]
+            if mname == "estimated" and any(r for r in ranked):
+                # last drift replan's analytic top pick (trial 0 with one)
+                top = next(r for r in ranked if r)[0]
+                rankings["drift_top_plan"] = top
             curves[mname] = R.summarize_trials(
                 per_trial, keys=("loss", "time_s"))
         target, t2t = R.target_and_t2t(curves)
@@ -200,7 +219,7 @@ def run(trials=3, T=400, N=64, gamma=2e-5, record_every=20, d=3,
         pre = loss[steps < T1][-1]
         post = loss[steps >= T1][0]
         summary = {"target_loss": target, "time_to_target_s": t2t,
-                   "mean_replans": replans,
+                   "mean_replans": replans, **rankings,
                    "final_loss": {m: c["loss"][-1]
                                   for m, c in curves.items()},
                    "resize_loss_pre": float(pre),

@@ -1,0 +1,214 @@
+"""Fig. 12 (beyond-paper): the auto-planner vs the exhaustive (d, wire, k)
+grid.
+
+The planner (`repro.sim.plan_search`) claims its three stages — enumerate
+the PlanSpec grid, prune analytically with StepTimer x convergence-penalty,
+confirm the survivors with short simulated runs — land on the cell an
+exhaustive sweep would pick.  This benchmark checks that claim the honest
+way: EVERY cell of `enumerate_candidates` is trained through the fig8
+protocol (reference EF dynamics under the straggler process's masks,
+joined to the cell's own StepTimer wall clock at production wire scale)
+under each non-iid process (hetero / markov / trace), time-to-target is
+measured against one shared drop target, and the planner's pick must
+dominate or tie the best fixed cell.
+
+It also runs the "config priced is config run" audit on every pick: the
+per-rank uplink bytes the chosen plan's StepTimer charges must equal the
+PlanSpec's own `rank_wire_bytes` ledger exactly (same object, two readers).
+
+Emits results/repro/fig12.json.
+
+  PYTHONPATH=src python benchmarks/fig12_planner.py [--smoke] [--strict]
+"""
+import argparse
+import dataclasses
+import json
+import sys
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.sim import (DEFAULT_COMPUTE, DEFAULT_LINK, HeterogeneousRates,
+                       MarkovBursty, TraceReplay, attach_times,
+                       enumerate_candidates, plan_search, simulate_run)
+from repro.sim.planner import plan_allocation, toy_compressor
+
+try:
+    from . import _repro_common as R
+except ImportError:                      # run as a script
+    import _repro_common as R
+
+OUT = None                # optional override; default R.results_dir()
+
+N_WIRE = 1 << 22          # production wire scale (ROADMAP comm table)
+
+P_SLOW, P_FAST, SLOW_FRACTION = 0.8, 0.02, 0.3
+
+# measured-t2t slack for "tie": the planner's cell must be within this
+# factor of the best fixed cell (trial noise on short runs)
+TIE_TOL = 0.15
+
+
+def _processes(N, smoke=False):
+    """fig9's non-iid family: two-class hetero, bursty markov, and a
+    recorded trace with one total-outage row."""
+    two = HeterogeneousRates.two_class(N, p_slow=P_SLOW, p_fast=P_FAST,
+                                       slow_fraction=SLOW_FRACTION)
+    rows = np.array(two.sample_trace(jax.random.PRNGKey(99),
+                                     24 if smoke else 64))
+    rows[3, :] = 0.0
+    return {
+        "hetero": two,
+        "markov": MarkovBursty(num_devices=N, p=0.2,
+                               mean_burst=4.0 if smoke else 8.0),
+        "trace": TraceReplay.from_array(rows),
+    }
+
+
+def cell_label(plan) -> str:
+    k = plan.k_per_block
+    ks = ""
+    if plan.compressor == "block_topk":
+        ks = "-k*" if isinstance(k, tuple) else f"-k{k}"
+    return f"d{plan.d}-{plan.compressor}{ks}"
+
+
+def _cell_curve(plan, proc, rates, *, n_wire, link, compute, trials, T,
+                gamma, dim, record_every):
+    """Brute-force ground truth for one grid cell: the fig8 protocol —
+    reference EF dynamics at toy `dim` under the process's masks, priced
+    by THIS cell's plan_timer at production `n_wire`."""
+    N = proc.num_devices
+    alloc = plan_allocation(plan, rates)
+    timer = R.plan_timer(plan, n_wire, link, compute)
+    per_trial = []
+    for s in range(trials):
+        grad_fn, loss_fn, theta0, _ = R.tasks.linreg_task(
+            seed=s, num_subsets=alloc.num_subsets, dim=dim)
+        comp = toy_compressor(plan, dim, n_wire)
+        method = "uncompressed" if comp is None else "cocoef"
+        hist = R.run_trial(method, comp, grad_fn, loss_fn, theta0,
+                           N=N, M=alloc.num_subsets, d=plan.d,
+                           p=float(1.0 - np.mean(rates)), gamma=gamma,
+                           T=T, seed=s, record_every=record_every,
+                           straggler=proc, rate_aware=True,
+                           allocation=alloc)
+        sim = simulate_run(proc, timer, T, jax.random.PRNGKey(1000 + s))
+        per_trial.append(attach_times(hist, sim))
+    return R.summarize_trials(per_trial, keys=("loss", "time_s"))
+
+
+def price_audit(plan, n_wire, N, link, compute) -> dict:
+    """The type-level guarantee, checked numerically anyway: the StepTimer
+    built from a plan charges exactly the per-rank uplink bytes the plan's
+    own `rank_wire_bytes` ledger declares."""
+    timer = R.plan_timer(plan, n_wire, link, compute)
+    t_bytes = np.asarray(timer.bytes_up_ranks(N))
+    p_bytes = np.asarray(plan.rank_wire_bytes(n_wire))
+    match = bool(np.array_equal(t_bytes, p_bytes))
+    if not match:                         # pragma: no cover
+        raise AssertionError(
+            f"price audit FAILED for {cell_label(plan)}: timer charges "
+            f"{t_bytes.tolist()} but the plan ledger says "
+            f"{p_bytes.tolist()}")
+    return {"bytes_up_per_rank": [int(b) for b in p_bytes],
+            "total_bytes_up": int(t_bytes.sum()), "match": match}
+
+
+def run(trials=2, T=300, N=32, gamma=1e-5, record_every=20,
+        n_wire=N_WIRE, link=DEFAULT_LINK, compute=DEFAULT_COMPUTE,
+        smoke=False, out_dir=None):
+    if smoke:
+        trials, T, N, record_every = 1, 80, 12, 10
+    dim = 2 * N
+    grid = enumerate_candidates(N, link=link, n=n_wire)
+    res = {"meta": {**R.run_metadata(), "n_wire": n_wire, "trials": trials,
+                    "T": T, "N": N, "dim": dim, "gamma": gamma,
+                    "tie_tol": TIE_TOL, "grid_size": len(grid),
+                    "grid": [cell_label(p) for p in grid],
+                    "two_class": {"p_slow": P_SLOW, "p_fast": P_FAST,
+                                  "slow_fraction": SLOW_FRACTION},
+                    "link": dataclasses.asdict(link),
+                    "compute": dataclasses.asdict(compute)},
+           "curves": {}, "summary": {}}
+
+    all_pass = True
+    for pname, proc in _processes(N, smoke=smoke).items():
+        rates = np.asarray(proc.rates())
+        curves = {}
+        for plan in grid:
+            curves[cell_label(plan)] = _cell_curve(
+                plan, proc, rates, n_wire=n_wire, link=link,
+                compute=compute, trials=trials, T=T, gamma=gamma,
+                dim=dim, record_every=record_every)
+        target, t2t = R.drop_target_and_t2t(curves)
+
+        # the planner's three-stage pick over the SAME grid
+        search = plan_search(n_wire, link=link, compute=compute,
+                             process=proc, candidates=grid, top_k=4,
+                             confirm_steps=min(T, 150), trials=trials,
+                             seed=0, dim=dim, gamma=gamma,
+                             record_every=record_every)
+        pick = search.best.plan
+        pick_label = cell_label(pick)
+        inf = float("inf")
+        best_label = min(t2t, key=lambda m: (t2t[m] if t2t[m] is not None
+                                             else inf, m))
+        best_t2t, pick_t2t = t2t[best_label], t2t[pick_label]
+        ok = (pick_t2t is not None and best_t2t is not None
+              and pick_t2t <= best_t2t * (1.0 + TIE_TOL))
+        all_pass = all_pass and ok
+
+        res["curves"][pname] = curves
+        res["summary"][pname] = {
+            "target_loss": target, "time_to_target_s": t2t,
+            "planner_pick": pick.to_dict(), "pick_label": pick_label,
+            "pick_time_to_target_s": pick_t2t,
+            "best_fixed_label": best_label,
+            "best_fixed_time_to_target_s": best_t2t,
+            "dominates_or_ties": ok,
+            "num_enumerated": search.num_enumerated,
+            "pruned_to": search.pruned_to,
+            "price_audit": price_audit(pick, n_wire, N, link, compute)}
+    res["meta"]["all_dominate_or_tie"] = all_pass
+
+    out = Path(out_dir) if out_dir else (OUT or R.results_dir())
+    out.mkdir(parents=True, exist_ok=True)
+    (out / "fig12.json").write_text(json.dumps(res, indent=1))
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny configuration for CI (1 trial, 80 steps, "
+                         "12 ranks)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit non-zero unless the planner dominates or "
+                         "ties every process (full-run acceptance; smoke "
+                         "runs are too short to gate on)")
+    ap.add_argument("--trials", type=int, default=2)
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--out", default=None,
+                    help="output directory (default: $REPRO_RESULTS_DIR "
+                         "or results/repro)")
+    args = ap.parse_args()
+    res = run(trials=args.trials, T=args.steps, smoke=args.smoke,
+              out_dir=args.out)
+    for pname, s in res["summary"].items():
+        pick = s["pick_time_to_target_s"]
+        best = s["best_fixed_time_to_target_s"]
+        fmt = lambda v: f"{v:.3f}s" if v is not None else "never"
+        tag = "OK " if s["dominates_or_ties"] else "MISS"
+        print(f"{pname:8s} [{tag}] planner={s['pick_label']:16s} "
+              f"t2t={fmt(pick)}  best-fixed={s['best_fixed_label']:16s} "
+              f"t2t={fmt(best)}  "
+              f"(grid {s['num_enumerated']} -> confirm {s['pruned_to']}; "
+              f"audit {'ok' if s['price_audit']['match'] else 'FAIL'})")
+    if args.strict and not res["meta"]["all_dominate_or_tie"]:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -30,10 +30,9 @@ import jax
 import numpy as np
 
 from repro.core import compression as C
-from repro.core.collectives import DenseWire, SignWire, SparseWire
-from repro.sim import (DEFAULT_COMPUTE, DEFAULT_LINK, StepTimer,
-                       TraceReplay, attach_times, get_straggler_process,
-                       simulate_run)
+from repro.core.plan import PlanSpec
+from repro.sim import (DEFAULT_COMPUTE, DEFAULT_LINK, TraceReplay,
+                       attach_times, get_straggler_process, simulate_run)
 
 try:
     from . import _repro_common as R
@@ -45,13 +44,18 @@ OUT = None                # optional override; default R.results_dir()
 N_WIRE = 1 << 22        # 4M coords/rank: the production wire scale the
                         # step times are projected at (ROADMAP comm table)
 
-# method -> (EF step, trial compressor, redundancy, production wire format)
+# method -> (EF step, trial compressor, PlanSpec).  The plan is the single
+# source for redundancy d AND the production wire the step times are priced
+# at — timer, bytes ledger, and metadata all derive from plan.wire(n_wire).
 METHODS = {
-    "cocoef_sign": ("cocoef", C.GroupedSign(), 2, SignWire(group_size=512)),
-    "cocoef_topk": ("cocoef", C.TopK(k=2), 2,
-                    SparseWire(k_per_block=8, block_size=512)),
-    "sgc_dense": ("uncompressed", None, 2, DenseWire()),
-    "uncoded_dense": ("uncompressed", None, 1, DenseWire()),
+    "cocoef_sign": ("cocoef", C.GroupedSign(),
+                    PlanSpec(d=2, compressor="sign", group_size=512)),
+    "cocoef_topk": ("cocoef", C.TopK(k=2),
+                    PlanSpec(d=2, compressor="block_topk", k_per_block=8,
+                             block_size=512)),
+    "sgc_dense": ("uncompressed", None, PlanSpec(d=2, compressor="identity")),
+    "uncoded_dense": ("uncompressed", None,
+                      PlanSpec(d=1, compressor="identity")),
 }
 
 
@@ -78,21 +82,30 @@ def run(trials=3, T=400, N=100, p=0.2, gamma=1e-5, record_every=20,
         num_buckets=1, overlap=False, smoke=False, out_dir=None):
     if smoke:
         trials, T, N, record_every = 1, 60, 20, 5
+    # fold the shared bucket knobs into each method's plan ONCE; everything
+    # downstream (d, timer wire, bytes ledger, metadata) reads the plan
+    plans = {name: R.plan_from_args(
+                 base=mplan, num_buckets=num_buckets,
+                 bucket_schedule=("pipelined" if overlap else "serial"))
+             for name, (_, _, mplan) in METHODS.items()}
     res = {"meta": {**R.run_metadata(), "n_wire": n_wire, "p": p,
                     "trials": trials, "T": T, "N": N, "gamma": gamma,
                     "num_buckets": num_buckets, "overlap": overlap,
                     "link": dataclasses.asdict(link),
                     "compute": dataclasses.asdict(compute),
+                    "plans": {name: pl.to_dict()
+                              for name, pl in plans.items()},
                     "wire_bytes_up_per_rank": {
-                        name: int(w.wire_bytes(n_wire))
-                        for name, (_, _, _, w) in METHODS.items()}},
+                        name: int(pl.wire(n_wire).wire_bytes(n_wire))
+                        for name, pl in plans.items()}},
            "curves": {}, "summary": {}}
 
     for pname, proc in _processes(N, p, smoke=smoke).items():
         curves = {}
-        for mname, (method, comp, d, wire) in METHODS.items():
-            timer = StepTimer(wire=wire, n=n_wire, link=link, compute=compute,
-                              num_buckets=num_buckets, overlap=overlap)
+        for mname, (method, comp, _) in METHODS.items():
+            plan = plans[mname]
+            d = plan.d
+            timer = R.plan_timer(plan, n_wire, link, compute)
             per_trial = []
             for s in range(trials):
                 grad_fn, loss_fn, theta0, _ = R.tasks.linreg_task(

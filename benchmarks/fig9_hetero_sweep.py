@@ -40,10 +40,10 @@ import jax
 import numpy as np
 
 from repro.core import coding, compression as C
-from repro.core.collectives import SignWire, SparseWire
+from repro.core.plan import PlanSpec
 from repro.sim import (DEFAULT_COMPUTE, DEFAULT_LINK, HeterogeneousRates,
-                       LinkProfile, MarkovBursty, StepTimer, TraceReplay,
-                       attach_times, simulate_run, solve_k_budgets)
+                       LinkProfile, MarkovBursty, TraceReplay, attach_times,
+                       simulate_run, solve_k_budgets)
 
 try:
     from . import _repro_common as R
@@ -91,15 +91,19 @@ def _weight_bias(alloc, W, rates) -> float:
 
 def _budget_demo(N: int):
     """Per-rank wire budgets under a heterogeneous uplink: the slow-uplink
-    third of the fleet gets smaller top-K budgets (equal-time solver)."""
+    third of the fleet gets smaller top-K budgets (equal-time solver),
+    carried as a per-rank-budget PlanSpec so the bytes ledger comes from
+    the same object a run would execute."""
     slow = max(1, N // 3)
     link = LinkProfile(rank_bandwidth_gbps=(2.5,) * slow
                        + (10.0,) * (N - slow))
     ks = solve_k_budgets(N_WIRE, N, link, block_size=512, k_ref=8)
-    wire = SparseWire(k_per_block=ks, block_size=512)
-    per_rank = wire.rank_wire_bytes(N_WIRE, N)
+    plan = PlanSpec(compressor="block_topk", k_per_block=ks, block_size=512,
+                    num_ranks=N)
+    per_rank = plan.rank_wire_bytes(N_WIRE)
     return {"rank_bandwidth_gbps": list(link.up_bandwidths(N)),
             "k_budgets": list(ks),
+            "plan": plan.to_dict(),
             "bytes_up_per_rank": [int(b) for b in per_rank],
             "uplink_s_per_rank": list(link.up_s_ranks(per_rank))}
 
@@ -113,11 +117,15 @@ def run(trials=3, T=400, N=60, gamma=2e-5, record_every=20, d=3,
     if smoke:
         trials, T, N, record_every, gamma = 1, 120, 16, 5, 1e-4
     dim = N // 2                        # overdetermined: bias => plateau
-    wire = SignWire(group_size=512)
-    timer = StepTimer(wire=wire, n=n_wire, link=link, compute=compute)
+    # all three variants ship the identical sign wire; the shared PlanSpec
+    # (d + wire knobs) prices the one StepTimer every curve reuses
+    plan = R.plan_from_args(base=PlanSpec(d=d, compressor="sign",
+                                          group_size=512))
+    timer = R.plan_timer(plan, n_wire, link, compute)
     res = {"meta": {**R.run_metadata(), "n_wire": n_wire,
                     "trials": trials, "T": T, "N": N,
                     "dim": dim, "d": d, "gamma": gamma,
+                    "plan": plan.to_dict(),
                     "two_class": {"p_slow": P_SLOW, "p_fast": P_FAST,
                                   "slow_fraction": SLOW_FRACTION},
                     "link": dataclasses.asdict(link),

@@ -12,6 +12,7 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import argparse
 import dataclasses
+import json
 from pathlib import Path
 
 import jax
@@ -21,8 +22,60 @@ import numpy as np
 from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
 from repro.configs import REGISTRY
 from repro.configs.common import ShapeCfg
+from repro.core.plan import PLAN_SCHEMA, PlanSpec
 from repro.launch.train import (TrainRun, batch_stream, build_train_setup,
                                 elastic_coding_state)
+
+PLAN_N_WIRE = 1 << 16     # flat size the auto-planner prices wires at
+                          # (matches the --rank-uplink-gbps budget solve)
+
+
+def _load_plan(path: str) -> PlanSpec:
+    """A saved plan: either a bare PlanSpec JSON (PlanSpec.save) or a
+    planner emission whose "plan" field carries the winning spec."""
+    obj = json.loads(Path(path).read_text())
+    if isinstance(obj, dict) and obj.get("schema") != PLAN_SCHEMA \
+            and "plan" in obj:
+        obj = obj["plan"]
+    return PlanSpec.from_dict(obj)
+
+
+def _auto_plan(args, spec, n_code, trace_path, plan_out):
+    """`--plan auto`: run the three-stage sim planner over THIS run's
+    straggler profile, print the ranking, persist the emission (winner +
+    ranking + provenance, CI schema-validates it), return the winner."""
+    import sys
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1]
+                           / "benchmarks"))
+    from _repro_common import run_metadata
+    from repro.sim import get_straggler_process, plan_search
+    p = spec.coding.straggler_p
+    if args.straggler != "iid" or p > 0:
+        proc = get_straggler_process(
+            args.straggler, n_code, p, mean_burst=args.straggler_burst,
+            spread=args.straggler_spread, trace=trace_path)
+        res = plan_search(PLAN_N_WIRE, process=proc,
+                          confirm_steps=120, seed=0)
+    else:       # fully reliable fleet: rates-only search, no masks to sim
+        res = plan_search(PLAN_N_WIRE, rates=np.ones((n_code,)),
+                          confirm_steps=120, seed=0)
+    print(f"planner: {res.num_enumerated} candidates -> "
+          f"{res.pruned_to} confirmed; ranking:")
+    for c in res.candidates[:res.pruned_to]:
+        t2t = (f"{c.sim_time_to_target_s:.3f}s"
+               if c.sim_time_to_target_s is not None else "never")
+        print(f"  d={c.plan.d} {c.plan.compressor:10s} "
+              f"alloc={c.plan.allocation:10s} score={c.score:.4f} "
+              f"sim-t2t={t2t}")
+    emission = {**res.to_dict(),
+                "plan": res.best.plan.to_dict(),
+                "meta": run_metadata(
+                    arch=args.arch, straggler=args.straggler,
+                    straggler_p=p, n_code=n_code, n_wire=PLAN_N_WIRE)}
+    Path(plan_out).parent.mkdir(parents=True, exist_ok=True)
+    Path(plan_out).write_text(json.dumps(emission, indent=1) + "\n")
+    print(f"plan emission -> {plan_out}")
+    return res.best.plan
 
 
 def main():
@@ -91,6 +144,17 @@ def main():
                          "with --compressor block_topk, solves equal-time "
                          "per-rank wire budgets (sim.solve_k_budgets) so "
                          "slow-uplink ranks send fewer coords per block")
+    ap.add_argument("--plan", default=None,
+                    help="'auto' runs the sim planner (enumerate -> "
+                         "analytic prune -> simulated confirm) over this "
+                         "run's straggler profile, prints the ranking, and "
+                         "trains the winner; a path loads a saved PlanSpec "
+                         "JSON (PlanSpec.save or a planner emission). "
+                         "Overrides --compressor/--num-buckets/"
+                         "--bucket-schedule/--backend")
+    ap.add_argument("--plan-out", default="/tmp/repro_e2e_plan.json",
+                    help="where --plan auto writes the winner + ranking + "
+                         "run_metadata provenance JSON")
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_e2e_ckpt")
     ap.add_argument("--metrics", action="store_true",
@@ -140,22 +204,42 @@ def main():
         print(f"per-rank wire budgets (equal-time): k={k_budgets} for "
               f"uplinks {bws} Gbit/s")
 
+    plan = None
+    if args.plan:
+        if k_budgets is not None:
+            ap.error("--rank-uplink-gbps solves k_budgets, which conflicts "
+                     "with an explicit --plan (per-rank budgets live in "
+                     "the plan's k_per_block)")
+        axis = dict(zip(mesh.axis_names, mesh.devices.shape))
+        n_code = int(np.prod([axis[a] for a in spec.coding.coding_axes
+                              if a in axis])) or 1
+        if args.plan == "auto":
+            plan = _auto_plan(args, spec, n_code, trace_path, args.plan_out)
+        else:
+            plan = _load_plan(args.plan)
+        print(f"plan: d={plan.d} compressor={plan.compressor} "
+              f"alloc={plan.allocation} buckets={plan.num_buckets} "
+              f"({plan.bucket_schedule})")
+
+    # with a plan, the ONE PlanSpec replaces the wire/bucket alias knobs
+    # (TrainRun rejects mixing them)
+    wire_kw = (dict(plan=plan) if plan is not None else
+               dict(compressor=args.compressor,
+                    num_buckets=args.num_buckets,
+                    bucket_schedule=args.bucket_schedule,
+                    backend=args.backend,
+                    k_budgets=k_budgets))
     try:
         run = TrainRun(base_lr=5e-3, mode="cocoef",
-                       compressor=args.compressor,
-                       num_buckets=args.num_buckets,
-                       bucket_schedule=args.bucket_schedule,
                        prefetch=args.prefetch,
-                       backend=args.backend,
                        straggler=args.straggler,
                        straggler_burst=args.straggler_burst,
                        straggler_spread=args.straggler_spread,
                        straggler_trace=trace_path,
                        rate_aware=not args.mean_rate_coding,
-                       k_budgets=k_budgets,
                        elastic=args.elastic,
                        replan_threshold=args.replan_threshold,
-                       metrics=args.metrics)
+                       metrics=args.metrics, **wire_kw)
         setup = build_train_setup(spec, mesh, shape, run, smoke=True)
     except ValueError as e:        # bad straggler/coding knobs fail HERE,
         ap.error(str(e))           # not as NaNs deep inside jit
@@ -196,10 +280,11 @@ def main():
         mdir = Path(args.metrics_dir)
         meta = run_metadata(
             arch=args.arch, steps=args.steps, seed=run.seed,
-            mode=run.mode, compressor=args.compressor,
-            num_buckets=args.num_buckets,
-            bucket_schedule=args.bucket_schedule,
-            backend_requested=args.backend, straggler=args.straggler,
+            mode=run.mode, compressor=setup.plan.compressor,
+            num_buckets=setup.plan.num_buckets,
+            bucket_schedule=setup.plan.bucket_schedule,
+            backend_requested=setup.plan.backend,
+            plan=setup.plan.to_dict(), straggler=args.straggler,
             straggler_p=spec.coding.straggler_p, prefetch=args.prefetch,
             rate_aware=run.rate_aware, n_code=setup.n_code,
             flat_pad=setup.flat_pad)
@@ -268,11 +353,11 @@ def main():
         from repro.obs import span_events, steptimer_timeline, \
             write_chrome_trace
         from repro.sim import StepTimer
-        wire = setup.cocoef_cfg.wire_format(
-            setup.flat_pad // run.num_buckets, 1)
+        # priced from setup.plan — the exact PlanSpec the step was built on
+        wire = setup.plan.wire(setup.flat_pad // setup.plan.num_buckets, 1)
         timer = StepTimer(wire=wire, n=setup.flat_pad,
-                          num_buckets=run.num_buckets,
-                          overlap=run.bucket_schedule == "pipelined")
+                          num_buckets=setup.plan.num_buckets,
+                          overlap=setup.plan.overlap)
         sim_ev, sim_t = steptimer_timeline(
             timer, np.asarray(masks, np.float64), pid=1)
         events = span_events(rec.spans, pid=0, counters=rec.counters) \

@@ -1,3 +1,4 @@
 """COCO-EF core: the paper's contribution (compression + coding + EF)."""
 from . import coding, coding_state, collectives, compression, \
-    error_feedback, cocoef  # noqa: F401
+    error_feedback, cocoef, plan  # noqa: F401
+from .plan import PlanSpec  # noqa: F401

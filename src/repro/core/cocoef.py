@@ -92,25 +92,16 @@ class CocoEFConfig:
             backend=self.backend)
 
     def wire_format(self, n: int, nd: int) -> WireFormat:
-        """Wire format for one bucket of `n` coords over `nd` chunks."""
-        if self.compressor == "sign":
-            return SignWire(group_size=self.group_size)
-        if self.compressor == "block_topk":
-            return SparseWire(k_per_block=self.k_per_block,
-                              block_size=self.block_size,
-                              value_dtype=self.wire_dtype)
-        if self.compressor == "topk":
-            # global top-K realized as one block per all_to_all chunk with an
-            # equal per-chunk budget (fixed-shape payload; see
-            # collectives.wire_for_compressor).  topk_k is the GLOBAL budget,
-            # so it is split across nd chunks AND num_buckets.
-            block = n // nd
-            kb = -(-self.topk_k // (nd * self.num_buckets))
-            return SparseWire(k_per_block=min(block, kb),
-                              block_size=block, value_dtype=self.wire_dtype)
-        if self.compressor == "identity":
-            return DenseWire(value_dtype=self.wire_dtype)
-        raise ValueError(f"unknown compressor {self.compressor!r}")
+        """Wire format for one bucket of `n` coords over `nd` chunks.
+
+        Delegates to `plan.build_wire` — the one mapping from compressor
+        name + knobs to a WireFormat, shared with `PlanSpec.wire`."""
+        from .plan import build_wire
+        return build_wire(self.compressor, group_size=self.group_size,
+                          k_per_block=self.k_per_block,
+                          block_size=self.block_size, topk_k=self.topk_k,
+                          value_dtype=self.wire_dtype, n=n, nd=nd,
+                          num_buckets=self.num_buckets)
 
     @property
     def pad_multiple(self) -> int:

@@ -26,7 +26,7 @@ bit-for-bit, so the dynamic path equals the static path exactly.
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Optional, Sequence, Tuple
+from typing import Callable, NamedTuple, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -155,12 +155,23 @@ class CodingPlan:
     min_rate: float = 0.05
     load_slack: float = 1.25
     exact_load: bool = False
+    replan_hook: Optional[Callable[[np.ndarray], object]] = \
+        dataclasses.field(default=None, repr=False, compare=False)
+    # ^ optional planner callback (e.g. `sim.planner.elastic_replan_hook`):
+    #   invoked with the clipped rate estimates whenever a drift-triggered
+    #   re-allocation fires, and its return value is surfaced as
+    #   info["plan_ranking"] — so an elastic run re-invokes the analytic
+    #   pruning stage on drift and logs what the planner would now pick.
+    #   The hook must not mutate the plan (it advises; wire/shape changes
+    #   need a restart through checkpoint.elastic_rescale_ef).
 
     @classmethod
     def create(cls, rates: Sequence[float], num_subsets: int, d: int, *,
                drift_threshold: float = 0.1, min_rate: float = 0.05,
                load_slack: float = 1.25, exact_load: bool = False,
-               allocation: Optional[coding.Allocation] = None) -> "CodingPlan":
+               allocation: Optional[coding.Allocation] = None,
+               replan_hook: Optional[Callable[[np.ndarray], object]] = None,
+               ) -> "CodingPlan":
         """Plan from initial rates.  Pass `allocation` to keep an existing
         placement (e.g. the static setup's cyclic allocation) so epoch 0
         of the dynamic path is bit-for-bit the static path."""
@@ -171,7 +182,8 @@ class CodingPlan:
                 exact_load=exact_load)
         return cls(allocation=allocation, rates_planned=q.copy(), d=int(d),
                    drift_threshold=drift_threshold, min_rate=min_rate,
-                   load_slack=load_slack, exact_load=exact_load)
+                   load_slack=load_slack, exact_load=exact_load,
+                   replan_hook=replan_hook)
 
     def clip(self, rates: Sequence[float]) -> np.ndarray:
         return np.clip(np.asarray(rates, np.float64), self.min_rate, 1.0)
@@ -213,6 +225,8 @@ class CodingPlan:
         info = {"epoch": self.epoch, "drift": drift,
                 "reallocated": bool(reallocated),
                 "rates_estimate": q.tolist()}
+        if reallocated and self.replan_hook is not None:
+            info["plan_ranking"] = self.replan_hook(q)
         return st, info
 
     def resize(self, rates: Sequence[float], num_subsets: int) -> None:

@@ -37,6 +37,7 @@ from repro.core import coding
 from repro.core.coding_state import CodingPlan, CodingState
 from repro.core.cocoef import (CocoEFConfig, FlatMeta, cocoef_update,
                                flatten_local, padded_size, unflatten_local)
+from repro.core.plan import PlanSpec
 from repro.nn import Model
 from repro.obs.metrics import (MetricsFrame, frame_out_specs,
                                reduce_frame_grid)
@@ -57,31 +58,42 @@ class TrainRun:
     schedule_total: Optional[int] = None  # cosine: decay horizon (steps)
     warmup: int = 0
     optimizer: OptimizerConfig = OptimizerConfig()
-    compressor: Optional[str] = None  # override spec.coding.compressor
+    plan: Optional[PlanSpec] = None  # THE deployment config (core.plan):
+    #   d, allocation mode, wire knobs, buckets, backend.  When set it is
+    #   the single source of truth and the deprecated alias fields below
+    #   (compressor / k_budgets / num_buckets / bucket_schedule / backend)
+    #   must stay at their defaults; when None, `resolve_plan` assembles
+    #   the identical PlanSpec from those aliases + spec.coding, so every
+    #   pre-plan caller keeps working bit-for-bit
+    compressor: Optional[str] = None  # DEPRECATED alias -> plan.compressor
     ef_dtype: str = "float32"
     phase2_dtype: str = "float32"
     phase2_sign: bool = False
-    num_buckets: int = 1
-    bucket_schedule: str = "pipelined"  # pipelined | serial bucket issue
-    #   order (CocoEFConfig.bucket_schedule): pipelined double-buffers the
+    num_buckets: int = 1             # DEPRECATED alias -> plan.num_buckets
+    bucket_schedule: str = "pipelined"  # DEPRECATED alias ->
+    #   plan.bucket_schedule.  pipelined | serial bucket issue order
+    #   (CocoEFConfig.bucket_schedule): pipelined double-buffers the
     #   per-bucket collectives so bucket i's wire transfer overlaps bucket
     #   i+1's fused local step; bit-for-bit equal to serial
     prefetch: int = 0                # host->device batches staged ahead of
     #   the step (data.pipeline.prefetch_to_device); 0 = synchronous.
     #   Opt-in: on XLA:CPU the worker thread's concurrent client calls can
     #   race the fake-device collective rendezvous (see prefetch_to_device)
-    backend: str = "auto"            # auto | pallas | jnp kernel dispatch
+    backend: str = "auto"            # DEPRECATED alias -> plan.backend
+    #   (auto | pallas | jnp kernel dispatch)
     straggler: str = "iid"           # iid | markov | hetero | trace
     straggler_burst: float = 8.0     # markov: mean slow-burst length (steps)
     straggler_spread: float = 0.5    # hetero: p_i in p*(1 +/- spread)
-    straggler_trace: Optional[str] = None  # trace: recorded-mask JSON path
+    straggler_trace: Optional[str] = None  # trace: recorded-mask JSON or
+    #   per-rank availability CSV path (sim.TraceReplay.from_file)
     rate_aware: bool = True          # encode weights from per-rank rates
     #   q_i (StragglerProcess.rates()) instead of the scalar mean rate p —
     #   identical to eq. 3 for uniform rates, unbiased under non-iid
     #   stragglers; False = the paper-faithful mean-rate eq. 3
     k_budgets: Optional[Tuple[int, ...]] = None
-    #   per-coding-rank block-top-K wire budgets (sim.solve_k_budgets);
-    #   overrides spec.coding.k_per_block when compressor="block_topk"
+    #   DEPRECATED alias -> plan.k_per_block tuple: per-coding-rank
+    #   block-top-K wire budgets (sim.solve_k_budgets); overrides
+    #   spec.coding.k_per_block when compressor="block_topk"
     elastic: bool = False            # dynamic coding plane: the train step
     #   takes an explicit CodingState (rates_estimate, W, epoch) argument
     #   and folds W in-graph via the batch's subset_ids, so online rate
@@ -134,6 +146,24 @@ class TrainRun:
         if self.k_budgets is not None and \
                 any(k < 1 for k in self.k_budgets):
             raise ValueError("every per-rank k budget must be >= 1")
+        if self.k_budgets is not None and len(self.k_budgets) == 0:
+            raise ValueError("k_budgets must be non-empty (one per-rank "
+                             "block-top-K budget per coding rank)")
+        if self.plan is not None:
+            # the deprecated alias cluster and an explicit PlanSpec are
+            # mutually exclusive: a plan that silently loses to a stray
+            # alias would un-do the "one source of truth" guarantee
+            _alias_defaults = {"compressor": None, "k_budgets": None,
+                               "num_buckets": 1,
+                               "bucket_schedule": "pipelined",
+                               "backend": "auto"}
+            clash = [f for f, dflt in _alias_defaults.items()
+                     if getattr(self, f) != dflt]
+            if clash:
+                raise ValueError(
+                    f"TrainRun(plan=...) conflicts with deprecated alias "
+                    f"field(s) {clash}: the plan already carries those "
+                    f"knobs — set them on the PlanSpec instead")
         if not self.replan_threshold > 0.0:
             raise ValueError(f"replan_threshold={self.replan_threshold} "
                              f"must be > 0")
@@ -142,6 +172,44 @@ class TrainRun:
                 "elastic runs need synchronous batches (prefetch=0): a "
                 "replan changes the subset placement between batch "
                 "generation and consumption")
+
+    def resolve_plan(self, coding_cfg, n_code: int) -> PlanSpec:
+        """The effective PlanSpec of this run on `n_code` coding ranks.
+
+        With an explicit `plan`, binds/validates its `num_ranks` against the
+        mesh.  Otherwise assembles the identical PlanSpec the pre-plan code
+        path implied: deprecated alias fields override `coding_cfg`
+        (configs.common.CodingCfg) exactly as `build_train_setup` used to do
+        inline — the equivalence every legacy caller relies on."""
+        m = max(n_code, 1)
+        if self.plan is not None:
+            if self.plan.num_ranks is None:
+                return dataclasses.replace(self.plan, num_ranks=m)
+            if self.plan.num_ranks != m:
+                raise ValueError(
+                    f"plan targets num_ranks={self.plan.num_ranks} coding "
+                    f"ranks but the mesh has {m}")
+            return self.plan
+        comp = self.compressor or coding_cfg.compressor
+        k_per_block = coding_cfg.k_per_block
+        if self.k_budgets is not None:
+            if comp != "block_topk":
+                raise ValueError(
+                    f"k_budgets rides the block-top-K sparse wire; the "
+                    f"effective compressor is {comp!r} (pass "
+                    f"compressor='block_topk' or drop k_budgets)")
+            if len(self.k_budgets) != m:
+                raise ValueError(f"k_budgets has {len(self.k_budgets)} "
+                                 f"entries, the run has {m} coding ranks")
+            k_per_block = self.k_budgets
+        return PlanSpec(
+            d=min(coding_cfg.redundancy, m), allocation="uniform",
+            compressor=comp, group_size=coding_cfg.group_size,
+            k_per_block=k_per_block, block_size=coding_cfg.block_size,
+            topk_k=coding_cfg.topk_k, value_dtype=coding_cfg.wire_dtype,
+            num_buckets=self.num_buckets,
+            bucket_schedule=self.bucket_schedule, backend=self.backend,
+            num_ranks=m)
 
 
 @dataclasses.dataclass
@@ -164,6 +232,10 @@ class TrainSetup:
     init_state: Any                  # (key) -> (params, e, opt) real arrays
     allocation: coding.Allocation
     cocoef_cfg: CocoEFConfig
+    plan: PlanSpec = PlanSpec()      # the resolved deployment plan (num_ranks
+    #   bound to the mesh); "the config priced is the config run": price
+    #   StepTimer with plan.wire(...)/plan.rank_wire_bytes and you priced
+    #   exactly what train_step ships
     straggler_process: Optional[stragglers.StragglerProcess] = None
     coding_plan: Optional[CodingPlan] = None   # elastic runs: the host-side
     #   replan controller; its CURRENT allocation is what the batch maker
@@ -208,11 +280,11 @@ def build_train_setup(spec: ArchSpec, mesh: Mesh, shape: ShapeCfg,
     else:
         p_strag = spec.coding.straggler_p
 
-    # ---- gradient coding allocation (static, host-side) -------------------
-    M = n_code                        # one subset per coding rank by default
-    d = min(spec.coding.redundancy, max(n_code, 1))
-    alloc = (coding.cyclic_allocation(n_code, M, d) if n_code > 1 else
-             coding.Allocation(S=np.ones((1, 1), np.int8)))
+    # ---- the effective deployment plan (single source of truth) ----------
+    # `plan` carries every (d, wire, k, schedule, backend) knob from here
+    # on; the deprecated TrainRun aliases and spec.coding were already
+    # folded into it, so nothing below re-derives a knob from two places.
+    plan = run.resolve_plan(spec.coding, n_code)
 
     # straggler process feeding the mask-provider hook (repro.sim): the
     # legacy fast path (iid with p=0 -> all-ones mask, no PRNG work) is
@@ -230,6 +302,22 @@ def build_train_setup(spec: ArchSpec, mesh: Mesh, shape: ShapeCfg,
     if run.rate_aware and straggler_proc is not None:
         straggler_rates = tuple(float(x) for x in straggler_proc.rates())
 
+    # ---- gradient coding allocation (static, host-side) -------------------
+    M = n_code                        # one subset per coding rank by default
+    d = plan.d
+    if n_code <= 1:
+        alloc = coding.Allocation(S=np.ones((1, 1), np.int8))
+    elif plan.allocation == "uniform":
+        alloc = coding.cyclic_allocation(n_code, M, d)
+    else:
+        # heterogeneity-aware placement from the same rates the encode
+        # weights use (planned rates when no process is attached)
+        q = np.asarray(straggler_rates, np.float64) \
+            if straggler_rates is not None \
+            else np.full((n_code,), 1.0 - p_strag)
+        alloc = coding.rate_aware_allocation(
+            q, M, d, exact_load=(plan.allocation == "exact_load"))
+
     gb, seq = shape.global_batch, shape.seq_len
     per_subset = max(1, gb // M)
     b_loc = per_subset * d            # redundancy multiplies per-rank batch
@@ -242,40 +330,26 @@ def build_train_setup(spec: ArchSpec, mesh: Mesh, shape: ShapeCfg,
     gspecs = rules.grads_specs(pshapes, cfg, mesh, coding_axes, fsdp=fsdp)
     gshard = jax.tree.map(lambda s: NamedSharding(mesh, s), gspecs)
 
-    # wire / compressor selection (run override beats the arch's plan)
-    group = spec.coding.group_size
+    # wire / compressor / schedule knobs all come from the resolved plan
     nd_chunk = axis_sizes[coding_axes[-1]] if coding_axes else 1
-
-    k_per_block = spec.coding.k_per_block
-    if run.k_budgets is not None:
-        eff_comp = run.compressor or spec.coding.compressor
-        if eff_comp != "block_topk":
-            raise ValueError(
-                f"k_budgets rides the block-top-K sparse wire; the "
-                f"effective compressor is {eff_comp!r} (pass "
-                f"compressor='block_topk' or drop k_budgets)")
-        if len(run.k_budgets) != max(n_code, 1):
-            raise ValueError(f"k_budgets has {len(run.k_budgets)} entries, "
-                             f"the run has {max(n_code, 1)} coding ranks")
-        k_per_block = run.k_budgets
 
     cocoef_cfg = CocoEFConfig(
         coding_axes=coding_axes if coding_axes else ("data",),
-        group_size=group, straggler_p=p_strag,
+        group_size=plan.group_size, straggler_p=p_strag,
         straggler_rates=straggler_rates, mode=mode,
-        compressor=run.compressor or spec.coding.compressor,
-        topk_k=spec.coding.topk_k, k_per_block=k_per_block,
-        block_size=spec.coding.block_size, wire_dtype=spec.coding.wire_dtype,
+        compressor=plan.compressor,
+        topk_k=plan.topk_k, k_per_block=plan.k_per_block,
+        block_size=plan.block_size, wire_dtype=plan.value_dtype,
         ef_dtype=run.ef_dtype, phase2_dtype=run.phase2_dtype,
-        phase2_sign=run.phase2_sign, num_buckets=run.num_buckets,
-        bucket_schedule=run.bucket_schedule, backend=run.backend)
+        phase2_sign=run.phase2_sign, num_buckets=plan.num_buckets,
+        bucket_schedule=plan.bucket_schedule, backend=plan.backend)
 
     # device-local flat size (uniform across devices by construction);
     # padding alignment comes from the active wire format, not just the
     # sign group (block top-K needs lcm(group, block))
     loc = _local_flat_size(pshapes, pspecs, mesh)
     flat_pad = padded_size(loc, nd_chunk, cocoef_cfg.pad_multiple,
-                           run.num_buckets)
+                           plan.num_buckets)
 
     mesh_shape = tuple(mesh.devices.shape)
     state_shape = mesh_shape + (flat_pad,)
@@ -328,7 +402,7 @@ def build_train_setup(spec: ArchSpec, mesh: Mesh, shape: ShapeCfg,
             else np.full((max(n_code, 1),), 1.0 - p_strag)
         coding_plan = CodingPlan.create(
             init_rates, M, d, drift_threshold=run.replan_threshold,
-            exact_load=True, allocation=alloc)
+            exact_load=(plan.allocation != "rate_aware"), allocation=alloc)
 
     # =======================================================================
     # stage 2 body (fully manual)
@@ -342,9 +416,9 @@ def build_train_setup(spec: ArchSpec, mesh: Mesh, shape: ShapeCfg,
         g_leaves = jax.tree.leaves(grads)
         p_flat, p_meta = flatten_local(p_leaves, nd_chunk,
                                        cocoef_cfg.pad_multiple,
-                                       run.num_buckets)
+                                       plan.num_buckets)
         g_flat, _ = flatten_local(g_leaves, nd_chunk, cocoef_cfg.pad_multiple,
-                                  run.num_buckets)
+                                  plan.num_buckets)
         e_loc = e.reshape(-1)
         opt_loc = tuple(o.reshape(-1) for o in opt)
 
@@ -388,7 +462,7 @@ def build_train_setup(spec: ArchSpec, mesh: Mesh, shape: ShapeCfg,
     out_specs = (params_in_specs, state_spec, opt_specs,
                  P(*mesh.axis_names))
     if run.metrics:
-        frame_abs = MetricsFrame.abstract(max(n_code, 1), run.num_buckets)
+        frame_abs = MetricsFrame.abstract(max(n_code, 1), plan.num_buckets)
         out_specs += (frame_out_specs(frame_abs, mesh.axis_names),)
 
     agg = compat.shard_map(
@@ -520,7 +594,7 @@ def build_train_setup(spec: ArchSpec, mesh: Mesh, shape: ShapeCfg,
         param_shardings=pshard, grads_shardings=gshard,
         state_sharding=state_sharding, batch_shardings=batch_shardings,
         train_step=train_step, input_specs=input_specs, init_state=init_state,
-        allocation=alloc, cocoef_cfg=cocoef_cfg,
+        allocation=alloc, cocoef_cfg=cocoef_cfg, plan=plan,
         straggler_process=straggler_proc, coding_plan=coding_plan,
         per_subset=per_subset)
 

@@ -16,6 +16,9 @@ Two halves (ISSUE 3 / ROADMAP Notes):
 """
 from .cost_model import (DEFAULT_COMPUTE, DEFAULT_LINK, ComputeProfile,
                          LinkProfile, StepTimer, solve_k_budgets)
+from .planner import (PlanCandidate, PlanSearchResult, elastic_replan_hook,
+                      enumerate_candidates, plan_allocation, plan_search,
+                      plan_timer, prune_candidates)
 from .simulate import SimRun, attach_times, simulate_run, time_to_target
 from .stragglers import (STRAGGLER_PROCESSES, HeterogeneousRates,
                          IIDBernoulli, MarkovBursty, StragglerProcess,
@@ -27,4 +30,7 @@ __all__ = [
     "LinkProfile", "ComputeProfile", "StepTimer", "solve_k_budgets",
     "DEFAULT_LINK", "DEFAULT_COMPUTE", "SimRun", "simulate_run",
     "attach_times", "time_to_target",
+    "PlanCandidate", "PlanSearchResult", "enumerate_candidates",
+    "plan_allocation", "plan_timer", "prune_candidates", "plan_search",
+    "elastic_replan_hook",
 ]

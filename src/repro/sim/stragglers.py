@@ -25,8 +25,9 @@ Implementations:
                       stationary straggle probability p.
   HeterogeneousRates  independent Bernoulli with per-rank p_i (linear or
                       two-class speed profiles, or explicit rates).
-  TraceReplay         deterministic masks replayed from a recorded JSON
-                      trace (cyclic beyond the trace length).
+  TraceReplay         deterministic masks replayed from a recorded trace —
+                      mask JSON or per-rank availability CSV (cyclic
+                      beyond the trace length).
 
 `sample_trace(key, T)` materializes the host-side (T, N) mask matrix the
 simulation/cost-model layer consumes; it is definitionally
@@ -280,6 +281,48 @@ class TraceReplay(StragglerProcess):
         obj = json.loads(Path(path).read_text())
         return cls.from_array(obj["masks"])
 
+    @classmethod
+    def from_csv(cls, path: Union[str, Path]) -> "TraceReplay":
+        """Per-rank availability CSV: one row per step, one column per rank
+        (1 = participated, 0 = straggled) — the shape real cluster logs
+        export to.  A leading non-numeric header row is skipped; fractional
+        availabilities round to the nearest of {0, 1} (>= 0.5 counts as
+        available)."""
+        path = Path(path)
+        rows = []
+        with open(path) as f:
+            for ln, line in enumerate(f):
+                cells = [c.strip() for c in line.strip().split(",")]
+                if not any(cells):
+                    continue                       # blank line
+                try:
+                    vals = [float(c) for c in cells]
+                except ValueError:
+                    if ln == 0 and not rows:
+                        continue                   # header row
+                    raise ValueError(
+                        f"{path}: non-numeric entry on line {ln + 1} "
+                        f"(only line 1 may be a header)")
+                if rows and len(vals) != len(rows[0]):
+                    raise ValueError(
+                        f"{path}: line {ln + 1} has {len(vals)} columns, "
+                        f"expected {len(rows[0])} (one per rank)")
+                rows.append(vals)
+        if not rows:
+            raise ValueError(f"{path}: empty availability CSV")
+        return cls.from_array(np.asarray(rows, np.float64))
+
+    @classmethod
+    def from_file(cls, path: Union[str, Path]) -> "TraceReplay":
+        """Load a recorded trace from either on-disk format: `*.csv` routes
+        through `from_csv` (per-rank availability columns), anything else
+        through `from_json` (the recorded-mask format `to_json` writes —
+        bit-compatible with the legacy path)."""
+        path = Path(path)
+        if path.suffix.lower() == ".csv":
+            return cls.from_csv(path)
+        return cls.from_json(path)
+
     def to_json(self, path: Union[str, Path]) -> Path:
         path = Path(path)
         path.parent.mkdir(parents=True, exist_ok=True)
@@ -301,7 +344,9 @@ def get_straggler_process(name: str, num_devices: int, p: float = 0.0, *,
     iid     IIDBernoulli(p)                  — legacy eq. (8), bit-for-bit
     markov  MarkovBursty(p, mean_burst)      — correlated slow bursts
     hetero  HeterogeneousRates.linear(p, spread) — per-rank p_i profile
-    trace   TraceReplay.from_json(trace)     — recorded masks
+    trace   TraceReplay.from_file(trace)     — recorded masks (JSON) or a
+            per-rank availability CSV (one row per step, one column per
+            rank; real cluster traces)
 
     All knobs are validated here (p in [0, 1), mean_burst >= 1,
     spread >= 0 with every p_i in [0, 1)) so bad CLI values fail with a
@@ -318,8 +363,9 @@ def get_straggler_process(name: str, num_devices: int, p: float = 0.0, *,
         return HeterogeneousRates.linear(num_devices, p, spread)
     if name == "trace":
         if trace is None:
-            raise ValueError("straggler='trace' needs a trace JSON path")
-        proc = TraceReplay.from_json(trace)
+            raise ValueError("straggler='trace' needs a trace path "
+                             "(recorded-mask JSON or availability CSV)")
+        proc = TraceReplay.from_file(trace)
         if proc.num_devices != num_devices:
             raise ValueError(f"trace has {proc.num_devices} devices, the run "
                              f"has {num_devices}")

@@ -1,0 +1,223 @@
+"""PlanSpec configuration plane + the auto-tuning planner.
+
+Covers the PR-10 contract: PlanSpec round-trips every wire (including
+per-rank budget tuples) and validates at construction; the deprecated
+TrainRun alias fields resolve to the IDENTICAL PlanSpec an explicit plan
+would carry (and mixing the two is rejected); the analytic pruning stage
+never drops the brute-force StepTimer optimum; plan_search is
+deterministic under a fixed seed; the plan-derived StepTimer charges
+exactly the plan's own byte ledger; and TraceReplay's CSV trace format is
+bit-compatible with the JSON path.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import REGISTRY
+from repro.core.plan import PLAN_SCHEMA, PlanSpec
+from repro.launch.train import TrainRun
+from repro.sim import (DEFAULT_COMPUTE, HeterogeneousRates, LinkProfile,
+                       TraceReplay, elastic_replan_hook,
+                       enumerate_candidates, plan_search, plan_timer,
+                       prune_candidates)
+from repro.sim.planner import convergence_penalty, expected_step_s
+
+
+# ---------------------------------------------------------------------------
+# PlanSpec: serialization + construction-time validation
+# ---------------------------------------------------------------------------
+
+ROUNDTRIP_PLANS = [
+    PlanSpec(),                                            # defaults
+    PlanSpec(d=3, compressor="sign", group_size=128,
+             value_dtype="bfloat16", num_buckets=4,
+             bucket_schedule="serial", backend="jnp"),
+    PlanSpec(d=1, compressor="identity", allocation="rate_aware"),
+    PlanSpec(compressor="block_topk", k_per_block=4, block_size=128),
+    PlanSpec(compressor="topk", topk_k=96, allocation="exact_load"),
+    PlanSpec(compressor="block_topk", k_per_block=(2, 4, 8, 16),
+             block_size=256, num_ranks=4),                 # per-rank budgets
+    PlanSpec(d=2, compressor="sign", num_ranks=8),
+]
+
+
+@pytest.mark.parametrize("plan", ROUNDTRIP_PLANS,
+                         ids=lambda p: f"{p.compressor}-{p.allocation}")
+def test_planspec_json_roundtrip_every_field(plan):
+    again = PlanSpec.from_json(plan.to_json())
+    assert again == plan
+    assert again.to_dict() == plan.to_dict()
+    assert plan.to_dict()["schema"] == PLAN_SCHEMA
+
+
+def test_planspec_rejects_unknown_fields_and_schema():
+    with pytest.raises(ValueError, match="unknown PlanSpec fields"):
+        PlanSpec.from_dict({"schema": PLAN_SCHEMA, "dd": 2})
+    with pytest.raises(ValueError, match="schema"):
+        PlanSpec.from_dict({"schema": "repro.plan/v999", "d": 2})
+
+
+def test_planspec_validates_at_construction():
+    with pytest.raises(ValueError):
+        PlanSpec(d=0)
+    with pytest.raises(ValueError):
+        PlanSpec(allocation="psychic")
+    with pytest.raises(ValueError):
+        PlanSpec(compressor="gzip")
+    with pytest.raises(ValueError):
+        PlanSpec(d=5, num_ranks=4)                 # more replicas than ranks
+    with pytest.raises(ValueError):                # tuples need block_topk
+        PlanSpec(compressor="sign", k_per_block=(4, 4))
+
+
+def test_planspec_k_budget_length_validated_against_num_ranks():
+    # the PR-10 bugfix: a wrong-length budget tuple fails loudly at
+    # construction, not as a shape error deep inside jit
+    with pytest.raises(ValueError, match="one k per rank"):
+        PlanSpec(compressor="block_topk", k_per_block=(8, 8, 8),
+                 num_ranks=4)
+    ok = PlanSpec(compressor="block_topk", k_per_block=(8, 8, 8, 8),
+                  num_ranks=4)
+    assert ok.k_per_block == (8, 8, 8, 8)
+
+
+def test_plan_timer_charges_the_plan_ledger():
+    # "the config priced is the config run": StepTimer per-rank uplink
+    # bytes == the plan's own rank_wire_bytes, including per-rank budgets
+    plan = PlanSpec(compressor="block_topk", k_per_block=(2, 4, 8, 8),
+                    block_size=256, num_ranks=4)
+    n = 1 << 12
+    timer = plan_timer(plan, n)
+    np.testing.assert_array_equal(timer.bytes_up_ranks(4),
+                                  plan.rank_wire_bytes(n))
+
+
+# ---------------------------------------------------------------------------
+# TrainRun: deprecated aliases == explicit plan, conflicts rejected
+# ---------------------------------------------------------------------------
+
+def test_deprecated_aliases_build_identical_planspec():
+    cfg = REGISTRY["olmoe-1b-7b"].coding
+    n_code = 4
+    legacy = TrainRun(mode="cocoef", compressor="block_topk",
+                      k_budgets=(2, 4, 8, 8), num_buckets=2,
+                      bucket_schedule="serial", backend="jnp")
+    explicit = TrainRun(mode="cocoef", plan=PlanSpec(
+        d=min(cfg.redundancy, n_code), allocation="uniform",
+        compressor="block_topk", group_size=cfg.group_size,
+        k_per_block=(2, 4, 8, 8), block_size=cfg.block_size,
+        topk_k=cfg.topk_k, value_dtype=cfg.wire_dtype, num_buckets=2,
+        bucket_schedule="serial", backend="jnp", num_ranks=n_code))
+    assert legacy.resolve_plan(cfg, n_code) == \
+        explicit.resolve_plan(cfg, n_code)
+
+
+def test_default_aliases_resolve_to_default_plan():
+    cfg = REGISTRY["olmoe-1b-7b"].coding
+    plan = TrainRun(mode="cocoef").resolve_plan(cfg, 4)
+    assert plan.compressor == cfg.compressor
+    assert plan.d == min(cfg.redundancy, 4)
+    assert plan.num_ranks == 4
+    assert plan.allocation == "uniform"
+
+
+def test_plan_and_alias_conflict_rejected():
+    with pytest.raises(ValueError, match="deprecated alias"):
+        TrainRun(mode="cocoef", plan=PlanSpec(), compressor="sign")
+    with pytest.raises(ValueError, match="deprecated alias"):
+        TrainRun(mode="cocoef", plan=PlanSpec(), num_buckets=2)
+
+
+def test_legacy_k_budgets_length_validated():
+    cfg = REGISTRY["olmoe-1b-7b"].coding
+    run = TrainRun(mode="cocoef", compressor="block_topk",
+                   k_budgets=(8, 8, 8))
+    with pytest.raises(ValueError, match="coding ranks"):
+        run.resolve_plan(cfg, 4)
+    with pytest.raises(ValueError, match="block_topk"):
+        TrainRun(mode="cocoef", compressor="sign",
+                 k_budgets=(8, 8, 8, 8)).resolve_plan(cfg, 4)
+
+
+def test_explicit_plan_num_ranks_must_match_mesh():
+    cfg = REGISTRY["olmoe-1b-7b"].coding
+    run = TrainRun(mode="cocoef", plan=PlanSpec(num_ranks=8))
+    with pytest.raises(ValueError, match="mesh has 4"):
+        run.resolve_plan(cfg, 4)
+    # unbound plans bind to the mesh
+    bound = TrainRun(mode="cocoef", plan=PlanSpec()).resolve_plan(cfg, 4)
+    assert bound.num_ranks == 4
+
+
+# ---------------------------------------------------------------------------
+# planner: pruning vs brute force, determinism
+# ---------------------------------------------------------------------------
+
+def test_bruteforce_top1_survives_analytic_pruning():
+    # ground truth: sampled-trace StepTimer expectation x the same
+    # convergence penalty, over the full grid; the analytic stage may
+    # reorder the tail but must keep the brute-force optimum in the
+    # confirmation set
+    N, n = 12, 1 << 20
+    link = LinkProfile(bandwidth_gbps=1.0)
+    proc = HeterogeneousRates.two_class(N, p_slow=0.7, p_fast=0.05,
+                                        slow_fraction=0.25)
+    q = np.asarray(proc.rates())
+    cands = enumerate_candidates(N, link=link, n=n)
+    key = jax.random.PRNGKey(0)
+    brute = min(
+        ((expected_step_s(p, n, link, DEFAULT_COMPUTE, proc, key, T=128)
+          * convergence_penalty(p, q, n), p.to_json()) for p in cands))
+    kept = prune_candidates(cands, q, n, link, DEFAULT_COMPUTE, top_k=4)
+    assert brute[1] in {c.plan.to_json() for c in kept}
+
+
+def test_plan_search_deterministic_under_fixed_seed():
+    proc = HeterogeneousRates.two_class(8, p_slow=0.6, p_fast=0.05,
+                                        slow_fraction=0.25)
+    kw = dict(process=proc, top_k=3, confirm_steps=40, trials=1,
+              seed=3, dim=32, gamma=1e-4, record_every=10)
+    r1 = plan_search(1 << 16, **kw)
+    r2 = plan_search(1 << 16, **kw)
+    assert r1.to_json() == r2.to_json()
+    assert r1.best.confirmed
+    assert r1.num_enumerated >= r1.pruned_to == 3
+
+
+def test_replan_hook_surfaces_planner_ranking():
+    from repro.core.coding_state import CodingPlan
+    hook = elastic_replan_hook(1 << 14)
+    cp = CodingPlan.create(np.full(6, 0.8), 6, 2, drift_threshold=0.05,
+                           replan_hook=hook)
+    _, info = cp.maybe_replan(np.array([0.2] * 3 + [0.9] * 3))
+    assert info["reallocated"]
+    ranking = info["plan_ranking"]
+    assert ranking and ranking[0]["plan"]["schema"] == PLAN_SCHEMA
+    assert ranking[0]["score"] <= ranking[-1]["score"]
+
+
+# ---------------------------------------------------------------------------
+# TraceReplay: CSV format bit-compatible with JSON
+# ---------------------------------------------------------------------------
+
+def test_tracereplay_csv_bitcompatible_with_json(tmp_path):
+    rows = np.array([[1, 0, 1], [0, 1, 1], [1, 1, 1], [0, 0, 0]],
+                    np.float64)
+    jpath = TraceReplay.from_array(rows).to_json(tmp_path / "t.json")
+    cpath = tmp_path / "t.csv"
+    cpath.write_text("rank0,rank1,rank2\n" + "\n".join(
+        ",".join(str(x) for x in r) for r in rows) + "\n")
+    a = TraceReplay.from_file(jpath)
+    b = TraceReplay.from_file(cpath)
+    key = jax.random.PRNGKey(0)
+    for t in range(2 * len(rows)):            # wraps past the end too
+        np.testing.assert_array_equal(np.asarray(a.mask(key, t)),
+                                      np.asarray(b.mask(key, t)))
+
+
+def test_tracereplay_csv_rejects_ragged_rows(tmp_path):
+    p = tmp_path / "bad.csv"
+    p.write_text("1,0,1\n0,1\n")
+    with pytest.raises(ValueError, match="one per rank"):
+        TraceReplay.from_csv(p)
